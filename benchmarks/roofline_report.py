@@ -1,0 +1,36 @@
+"""Roofline terms per (arch x shape x mesh) from the dry-run artifacts
+(§Roofline deliverable; also emitted as CSV here for the harness)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def run(quick: bool = False) -> None:
+    files = sorted(glob.glob(os.path.join(ART, "*.json")))
+    if quick:
+        files = files[:6]
+    for f in files:
+        if "__naive" in f:
+            continue
+        r = json.load(open(f))
+        name = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r.get("skipped"):
+            emit([f"roofline,{name},0,skipped"])
+            continue
+        if r.get("status") != "ok":
+            emit([f"roofline,{name},0,error"])
+            continue
+        rf = r["roofline"]
+        dom_us = rf[rf["dominant"]] * 1e6
+        emit([f"roofline,{name},{dom_us:.0f},"
+              f"dominant={rf['dominant']};compute_s={rf['compute_s']:.4f};"
+              f"memory_s={rf['memory_s']:.4f};"
+              f"collective_s={rf['collective_s']:.4f};"
+              f"mem_per_dev_GiB="
+              f"{r['memory']['per_device_total'] / 2 ** 30:.1f}"])

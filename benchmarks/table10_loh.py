@@ -1,0 +1,43 @@
+"""Paper Table 10: hardware-execution latency on the large graphs (b2).
+We cannot run competitor accelerators; ``derived`` reports our overlay
+vs the whole-graph reference executor (the PyG-style baseline the paper's
+CPU columns embody) plus the predicted TPU-v5e latency."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gnn_builders as B
+from repro.core import reference as R
+
+from .common import OverlayExecutor, dataset, emit, features, run_model
+
+GRAPHS = [("FL", 0.125), ("RE", 1 / 256), ("YE", 1 / 64), ("AP", 1 / 512)]
+
+# Paper Table 10, GraphAGILE T_LoH on b2 (ms), for the scale-adjusted
+# sanity check of our analytic TPU model (different hardware: U250 614
+# GFLOPS vs v5e; the comparison is order-of-magnitude).
+PAPER_LOH_MS = {"FL": 11.5, "RE": 97.2, "YE": 104.3, "AP": 315.9}
+
+
+def run(quick: bool = False) -> None:
+    graphs = GRAPHS[:1] if quick else GRAPHS
+    ex = OverlayExecutor()
+    for dname, scale in graphs:
+        g = dataset(dname, scale)
+        x = features(g)
+        _, t_loh, _, cr, t_pred = run_model("b2", g, x, ex)
+        model = B.build("b2", g)
+        ref = jax.jit(lambda xx: R.run_reference(model, g, xx))
+        jax.block_until_ready(ref(x))
+        t0 = time.perf_counter()
+        jax.block_until_ready(ref(x))
+        t_ref = time.perf_counter() - t0
+        label = dname if scale == 1.0 else f"{dname}@{scale:g}"
+        pred_full = t_pred * 1e3 / scale      # linear-in-|E| extrapolation
+        emit([f"table10,b2/{label},{t_loh * 1e6:.0f},"
+              f"cpu_ref_ms={t_ref * 1e3:.0f};"
+              f"pred_tpu_fullscale_ms={pred_full:.1f};"
+              f"paper_u250_ms={PAPER_LOH_MS[dname]}"])

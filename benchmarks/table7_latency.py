@@ -1,0 +1,28 @@
+"""Paper Table 7: end-to-end latency = T_LoC + T_comm + T_LoH for every
+(model b1-b8 x dataset).  ``derived`` = T_E2E in ms and the predicted
+TPU-v5e T_LoH from the analytic perf model."""
+from __future__ import annotations
+
+from .common import (BIG_MODELS, DATASETS, MODELS, OverlayExecutor,
+                     dataset, emit, features, run_model)
+
+
+def run(quick: bool = False) -> None:
+    ds = DATASETS[:3] if quick else DATASETS
+    models = MODELS[:2] if quick else MODELS
+    ex = OverlayExecutor()
+    for bname in models:
+        for dname, scale in ds:
+            if scale < 1.0 and bname not in BIG_MODELS:
+                continue
+            g = dataset(dname, scale)
+            x = features(g)
+            t_loc, t_loh, t_comm, cr, t_pred = run_model(bname, g, x, ex)
+            e2e = t_loc + t_comm + t_loh
+            label = dname if scale == 1.0 else f"{dname}@{scale:g}"
+            emit([f"table7,{bname}/{label}/T_LoC,{t_loc * 1e6:.0f},"
+                  f"E2E_ms={e2e * 1e3:.2f}",
+                  f"table7,{bname}/{label}/T_LoH,{t_loh * 1e6:.0f},"
+                  f"pred_tpu_ms={t_pred * 1e3:.3f}",
+                  f"table7,{bname}/{label}/T_comm,{t_comm * 1e6:.0f},"
+                  f"binary_B={len(cr.binary)}"])

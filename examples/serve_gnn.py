@@ -1,0 +1,75 @@
+"""End-to-end driver: a GNN inference service on the overlay.
+
+  PYTHONPATH=src python examples/serve_gnn.py
+
+The paper's core claim in action: one fixed compute substrate serves a
+STREAM of (model, graph) requests — GCN, GAT, GIN, GraphSAGE, SGC on
+different graphs — with per-request software compilation in milliseconds
+and ZERO recompilation of the tile executables (the FPGA-overlay
+"no reconfiguration" property, XLA edition).  The request queue feeds an
+executor whenever it drains (Algorithm 9's idle-PE rule at request
+granularity).
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import ack  # noqa: E402
+from repro.core import gnn_builders as B  # noqa: E402
+from repro.core import graph as G  # noqa: E402
+from repro.core import reference as R  # noqa: E402
+from repro.core.compiler import CompileOptions, compile_model  # noqa: E402
+from repro.core.executor import OverlayExecutor  # noqa: E402
+from repro.core.passes.partition import PartitionConfig  # noqa: E402
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    # Fixed tile geometry = the overlay contract (one "bitstream").
+    opts = CompileOptions(partition=PartitionConfig(n1=256, n2=32))
+    executor = OverlayExecutor()
+
+    requests = []
+    for i, (mname, gname) in enumerate([
+            ("b1", "CO"), ("b6", "CI"), ("b3", "CO"), ("b7", "PU"),
+            ("b5", "CI"), ("b2", "PU"), ("b8", "CO"), ("b4", "CI")]):
+        g = G.synthesize(gname, seed=i).gcn_normalized()
+        requests.append((mname, g))
+
+    print(f"serving {len(requests)} requests "
+          f"(mixed models x mixed graphs, one overlay)...\n")
+    total_compile = total_exec = 0.0
+    for i, (mname, g) in enumerate(requests):
+        x = jnp.asarray(G.random_features(g, seed=i))
+        model = B.build(mname, g, seed=i)
+        t0 = time.perf_counter()
+        cr = compile_model(model, g, opts)
+        t_loc = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        y = executor.run(cr.program, x)
+        y.block_until_ready()
+        t_loh = time.perf_counter() - t0
+        total_compile += t_loc
+        total_exec += t_loh
+        err = float(jnp.max(jnp.abs(
+            y - R.run_reference(model, g, x))))
+        print(f"req {i}: {mname:3s} on {g.name:2s} "
+              f"(|V|={g.n_vertices:5d} |E|={g.n_edges:6d}) "
+              f"T_LoC={t_loc * 1e3:6.1f}ms  T_LoH={t_loh * 1e3:7.1f}ms  "
+              f"err={err:.1e}")
+
+    n_kernels = len(ack.compile_counter)
+    print(f"\ntotals: compile {total_compile * 1e3:.0f} ms, "
+          f"execute {total_exec * 1e3:.0f} ms")
+    print(f"distinct tile kernels compiled across ALL requests: "
+          f"{n_kernels} (bounded by tile geometry, not by #models or "
+          f"#graphs — the overlay property)")
+
+
+if __name__ == "__main__":
+    main()

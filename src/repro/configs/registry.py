@@ -1,0 +1,34 @@
+"""Registry of the assigned architectures (``--arch <id>``)."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "granite-8b": "granite_8b",
+    "gemma3-12b": "gemma3_12b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "gemma3-27b": "gemma3_27b",
+    "kimi-k2-1t-a32b": "kimi_k2",
+    "deepseek-v3-671b": "deepseek_v3",
+    "hymba-1.5b": "hymba_1_5b",
+    "llama-3.2-vision-11b": "llama32_vision_11b",
+    "whisper-base": "whisper_base",
+    "xlstm-125m": "xlstm_125m",
+}
+
+ARCHS: List[str] = list(_MODULES)
+
+
+def _mod(arch: str):
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _mod(arch).config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _mod(arch).smoke_config()

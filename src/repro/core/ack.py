@@ -1,0 +1,149 @@
+"""Adaptive Computation Kernel (paper §5.4) — the unified compute engine.
+
+One module executes every GNN kernel by mode switching: GEMM mode,
+SpDMM mode, SDDMM mode, vector-addition mode, plus the activation /
+affine epilogues of the Activation Unit.
+
+Backends:
+  * ``xla``    — jnp tile ops (vectorized gathers / dots), the production
+                 path on CPU and the GSPMD path on TPU.
+  * ``pallas`` — the hand-written Pallas kernels in ``repro.kernels``
+                 (VMEM BlockSpec tiling; interpret=True on CPU).
+
+Every tile function is jit-compiled once per *tile shape* and cached —
+never per model or per graph.  This is the overlay property: changing the
+GNN model or the input graph changes the instruction stream only, exactly
+like the FPGA overlay avoids reconfiguration.  ``compile_counter`` exposes
+the cache behaviour to the tests/benchmarks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .ir import Activation
+from .reference import apply_activation
+
+compile_counter: Dict[Tuple, int] = {}
+
+
+def _count(key: Tuple) -> None:
+    compile_counter[key] = compile_counter.get(key, 0) + 1
+
+
+# --------------------------------------------------------------------------- #
+# GEMM mode: output-stationary blocked matmul (Algorithm 1).
+# --------------------------------------------------------------------------- #
+@jax.jit
+def _gemm_xla(h: jnp.ndarray, w: jnp.ndarray, acc: jnp.ndarray) -> jnp.ndarray:
+    return acc + jnp.dot(h, w, preferred_element_type=jnp.float32)
+
+
+# --------------------------------------------------------------------------- #
+# SpDMM mode: blocked-ELL scatter-gather (Algorithms 2 & 4).
+#   out[r] (+)= reduce_k vals[r,k] * h_src[cols[r,k]]
+# --------------------------------------------------------------------------- #
+@functools.partial(jax.jit, static_argnames=("op",))
+def _spdmm_xla(h_src, cols, vals, mask, acc, flag, op: str):
+    gathered = h_src[cols]                       # [n1, w, n2]
+    if op in ("sum", "mean"):
+        msg = gathered * vals[..., None]
+        out = acc + jnp.sum(msg, axis=1)
+        return out, flag | mask.any(axis=1)
+    big = jnp.float32(3.4e38)
+    msg = gathered * vals[..., None]
+    if op == "max":
+        msg = jnp.where(mask[..., None], msg, -big)
+        return jnp.maximum(acc, jnp.max(msg, axis=1)), flag | mask.any(axis=1)
+    if op == "min":
+        msg = jnp.where(mask[..., None], msg, big)
+        return jnp.minimum(acc, jnp.min(msg, axis=1)), flag | mask.any(axis=1)
+    raise ValueError(op)
+
+
+# --------------------------------------------------------------------------- #
+# SDDMM mode: per-edge inner products (Algorithm 3).
+#   score[r, k] = <h_dst[r], h_src[cols[r, k]]>
+# --------------------------------------------------------------------------- #
+@jax.jit
+def _sddmm_xla(h_dst, h_src, cols, mask, acc):
+    gathered = h_src[cols]                       # [n1, w, n2]
+    part = jnp.einsum("rwf,rf->rw", gathered, h_dst)
+    return acc + jnp.where(mask, part, 0.0)
+
+
+@jax.jit
+def _sddmm_pair_xla(h_dst, h_src, cols, mask, acc):
+    """GAT pair scores: score[r,k] = h_src[cols[r,k], 0] + h_dst[r, 1]."""
+    part = h_src[cols][:, :, 0] + h_dst[:, 1][:, None]
+    return acc + jnp.where(mask, part, 0.0)
+
+
+@jax.jit
+def _vadd_xla(a, b, alpha, beta):
+    return alpha * a + beta * b
+
+
+@functools.partial(jax.jit, static_argnames=("act",))
+def _act_xla(x, act: int):
+    return apply_activation(x, Activation(act))
+
+
+@jax.jit
+def _affine_xla(x, scale, shift):
+    return x * scale + shift
+
+
+class ACK:
+    """Mode-switched compute engine; see module docstring."""
+
+    def __init__(self, backend: str = "xla", interpret: bool = True) -> None:
+        assert backend in ("xla", "pallas")
+        self.backend = backend
+        self.interpret = interpret
+        if backend == "pallas":
+            from repro.kernels import ops as kops  # local import: optional
+            self._kops = kops
+
+    # -- GEMM ----------------------------------------------------------- #
+    def gemm(self, h, w, acc):
+        _count(("gemm", h.shape, w.shape, self.backend))
+        if self.backend == "pallas":
+            return acc + self._kops.gemm(h, w, interpret=self.interpret)
+        return _gemm_xla(h, w, acc)
+
+    # -- SpDMM ---------------------------------------------------------- #
+    def spdmm(self, h_src, cols, vals, mask, acc, flag, op: str = "sum"):
+        _count(("spdmm", h_src.shape, cols.shape, op, self.backend))
+        if self.backend == "pallas" and op in ("sum", "mean"):
+            out = acc + self._kops.spdmm(cols, vals, h_src,
+                                         interpret=self.interpret)
+            return out, flag | mask.any(axis=1)
+        return _spdmm_xla(h_src, cols, vals, mask, acc, flag, op)
+
+    # -- SDDMM ---------------------------------------------------------- #
+    def sddmm(self, h_dst, h_src, cols, mask, acc, pair_sum: bool = False):
+        _count(("sddmm", h_dst.shape, cols.shape, pair_sum, self.backend))
+        if pair_sum:
+            return _sddmm_pair_xla(h_dst, h_src, cols, mask, acc)
+        if self.backend == "pallas":
+            return acc + jnp.where(
+                mask, self._kops.sddmm(h_dst, h_src, cols,
+                                       interpret=self.interpret), 0.0)
+        return _sddmm_xla(h_dst, h_src, cols, mask, acc)
+
+    # -- Vector addition / epilogues ------------------------------------ #
+    def vadd(self, a, b, alpha: float, beta: float):
+        _count(("vadd", a.shape, self.backend))
+        return _vadd_xla(a, b, jnp.float32(alpha), jnp.float32(beta))
+
+    def act(self, x, act: Activation):
+        _count(("act", x.shape, int(act)))
+        return _act_xla(x, int(act))
+
+    def affine(self, x, scale, shift):
+        _count(("affine", x.shape))
+        return _affine_xla(x, scale, shift)

@@ -1,0 +1,122 @@
+"""GraphAGILE instruction set (paper §5.3, Fig. 3).
+
+Every high-level instruction is 128 bits, packed as ``uint32[4]``:
+
+  word0: opcode(8) | pe_id(8) | act(6) | act_en(1) | on_edges(1) | flags(8)
+  word1: arg0(16) | arg1(16)
+  word2: arg2(16) | arg3(16)
+  word3: arg4(32)          (sizes that may exceed 16 bits: nnz, counts)
+
+The flags byte carries the double-buffer mutex annotations the compiler
+emits (paper §6.6): LOCK marks a memory-read that acquires a buffer,
+UNLOCK marks the compute instruction that releases it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import struct
+from typing import List, Tuple
+
+import numpy as np
+
+MAGIC = 0x47414749  # "GAGI"
+VERSION = 2
+
+
+class Opcode(enum.IntEnum):
+    NOP = 0
+    CSI = 1        # control & scheduling: heads a Layer Block
+    MEM_RD = 2
+    MEM_WR = 3
+    GEMM = 4
+    SPDMM = 5
+    SDDMM = 6
+    VADD = 7
+    ACT = 8
+    AFFINE = 9     # standalone batchnorm (only when fusion disabled)
+    HALT = 10
+
+
+class Buf(enum.IntEnum):
+    EDGE = 0
+    FEATURE = 1
+    WEIGHT = 2
+    RESULT = 3
+
+
+class Region(enum.IntEnum):
+    SUBSHARD = 0       # A(j, k)
+    SUBFIBER = 1       # H(i, j)   (fiber i, row-block j)
+    WEIGHT_BLOCK = 2   # W(k, i)
+    EDGE_WEIGHTS = 3   # per-edge scalar array segment
+    OUT_SUBFIBER = 4
+    OUT_EDGE = 5
+
+
+FLAG_LOCK = 1
+FLAG_UNLOCK = 2
+FLAG_ACC = 4        # accumulate into result buffer
+FLAG_LAST = 8       # last instruction of a tiling block
+
+
+@dataclasses.dataclass
+class Instr:
+    op: Opcode
+    pe: int = 0
+    act: int = 0
+    act_en: bool = False
+    on_edges: bool = False
+    flags: int = 0
+    args: Tuple[int, int, int, int] = (0, 0, 0, 0)
+    arg4: int = 0
+
+    # ------------------------------------------------------------------ #
+    def encode(self) -> np.ndarray:
+        w0 = ((int(self.op) & 0xFF)
+              | (self.pe & 0xFF) << 8
+              | (self.act & 0x3F) << 16
+              | (1 << 22 if self.act_en else 0)
+              | (1 << 23 if self.on_edges else 0)
+              | (self.flags & 0xFF) << 24)
+        a = [int(x) & 0xFFFF for x in self.args]
+        w1 = a[0] | a[1] << 16
+        w2 = a[2] | a[3] << 16
+        w3 = int(self.arg4) & 0xFFFFFFFF
+        return np.array([w0, w1, w2, w3], dtype=np.uint32)
+
+    @staticmethod
+    def decode(words: np.ndarray) -> "Instr":
+        w0, w1, w2, w3 = (int(w) for w in words)
+        return Instr(
+            op=Opcode(w0 & 0xFF),
+            pe=(w0 >> 8) & 0xFF,
+            act=(w0 >> 16) & 0x3F,
+            act_en=bool(w0 >> 22 & 1),
+            on_edges=bool(w0 >> 23 & 1),
+            flags=(w0 >> 24) & 0xFF,
+            args=(w1 & 0xFFFF, w1 >> 16, w2 & 0xFFFF, w2 >> 16),
+            arg4=w3,
+        )
+
+    def __repr__(self) -> str:  # compact trace form
+        f = "".join(c for c, m in zip("LUAZ", (1, 2, 4, 8)) if self.flags & m)
+        return (f"{self.op.name}(pe{self.pe} args={list(self.args)} "
+                f"a4={self.arg4}{' ' + f if f else ''})")
+
+
+# --------------------------------------------------------------------------- #
+def assemble(instrs: List[Instr]) -> bytes:
+    """Binary file: 16-byte header + 16 bytes per instruction (Table 8)."""
+    header = struct.pack("<IIII", MAGIC, VERSION, len(instrs), 0)
+    if not instrs:
+        return header
+    body = np.stack([i.encode() for i in instrs]).astype("<u4").tobytes()
+    return header + body
+
+
+def disassemble(blob: bytes) -> List[Instr]:
+    magic, version, n, _ = struct.unpack_from("<IIII", blob, 0)
+    assert magic == MAGIC and version == VERSION, "bad binary"
+    words = np.frombuffer(blob, dtype="<u4", offset=16).reshape(n, 4)
+    return [Instr.decode(w) for w in words]

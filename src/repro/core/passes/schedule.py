@@ -1,0 +1,53 @@
+"""Compiler Step 4b — task scheduling (paper §6.6, Algorithm 9).
+
+GraphAGILE executes layer by layer.  Within a layer, Tiling Blocks are
+assigned to PEs.  The paper does this *dynamically* (idle PE pulls the next
+block); in an SPMD software overlay the equivalent is a static balanced
+assignment computed at compile time: Longest-Processing-Time (LPT) greedy
+bin packing on the per-block cost estimate, which equalizes per-PE work the
+same way the idle-PE rule does (and is deterministic, which SPMD needs).
+The dynamic behaviour is preserved in the host serving loop
+(`runtime/serve_loop.py`) where a work queue feeds whichever PE drains
+first.
+
+Double-buffer overlap: within each PE stream, the MEM_RD instructions of
+tiling block t+1 may issue while block t computes (paper's
+lock/unlock-annotated WAR protection).  The executor realizes this with
+async dispatch; `overlap=False` inserts a barrier after every block
+(used by the Fig. 16 ablation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import List
+
+from .kernel_map import Program
+
+
+@dataclasses.dataclass
+class ScheduleReport:
+    per_layer_imbalance: List[float]   # max/mean PE load per layer
+
+    @property
+    def worst_imbalance(self) -> float:
+        return max(self.per_layer_imbalance, default=1.0)
+
+
+def run(prog: Program, n_pes: int = 8) -> ScheduleReport:
+    """LPT-assign tiling blocks to PEs; annotate pe ids on instructions."""
+    prog.n_pes = n_pes
+    imbalances: List[float] = []
+    for lb in prog.layer_blocks:
+        heap = [(0.0, pe) for pe in range(n_pes)]
+        heapq.heapify(heap)
+        for tb in sorted(lb.tiling_blocks, key=lambda t: -t.cost):
+            load, pe = heapq.heappop(heap)
+            tb.pe = pe
+            for ins in tb.instrs:
+                ins.pe = pe
+            heapq.heappush(heap, (load + tb.cost, pe))
+        loads = sorted(l for l, _ in heap)
+        mean = sum(loads) / n_pes
+        imbalances.append((loads[-1] / mean) if mean > 0 else 1.0)
+    return ScheduleReport(per_layer_imbalance=imbalances)

@@ -1,0 +1,1 @@
+from .synthetic import synthetic_batches  # noqa: F401

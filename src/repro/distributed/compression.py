@@ -1,0 +1,55 @@
+"""Gradient compression with error feedback (1-bit-Adam-family trick).
+
+``compress``/``decompress`` implement per-leaf symmetric int8 quantization
+with a power-of-two-free scale (max-abs / 127).  ``ef_transform`` wraps a
+gradient pytree with error-feedback residual state so the quantization
+error is carried to the next step instead of being lost — the standard
+requirement for convergence under compressed communication.
+
+Deployment note: under GSPMD the data-parallel reduction is emitted by
+XLA, so the wire format is not directly programmable from here; on a real
+cluster this module pairs with a shard_map reduce-scatter over the int8
+payload (see distributed/pipeline.py for the manual-collective pattern).
+In this repo the compression path is numerically exercised end-to-end
+(quantize -> dequantize -> optimizer) and its convergence is covered by
+tests/test_distributed.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(g)).astype(jnp.float32) / 127.0
+    scale = jnp.maximum(scale, 1e-20)
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def decompress(q: jnp.ndarray, scale: jnp.ndarray,
+               dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def init_error_feedback(params: Any) -> Any:
+    return jax.tree.map(
+        lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def ef_transform(grads: Any, ef_state: Any) -> Tuple[Any, Any]:
+    """Simulate int8 communication of (grads + residual); returns the
+    dequantized gradients and the updated residual state."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = compress(corrected)
+        deq = decompress(q, s)
+        return deq.astype(g.dtype), corrected - deq
+
+    gl, treedef = jax.tree.flatten(grads)
+    el = jax.tree.leaves(ef_state)
+    pairs = [one(g, e) for g, e in zip(gl, el)]
+    return (treedef.unflatten([p[0] for p in pairs]),
+            treedef.unflatten([p[1] for p in pairs]))

@@ -1,0 +1,167 @@
+"""Parameter/activation sharding rules for the (pod, data, model) mesh.
+
+MaxText-style logical rules, resolved by parameter *name*: tensor-parallel
+dimensions (vocab, heads, ffn, experts) map to the ``model`` axis; batch
+maps to ``(pod, data)``; everything small is replicated.  Leading stacked-
+layer dimensions (from scan-over-layers) are never sharded.
+
+ZeRO-1: `zero_spec` additionally shards optimizer-state copies along the
+first divisible dimension over ``data`` (see distributed/zero.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+BATCH_AXES = ("pod", "data")
+MODEL_AXIS = "model"
+
+# rule: parameter leaf name -> base PartitionSpec (without stacked dims)
+_NAME_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    # embeddings / head
+    "embed": (MODEL_AXIS, None),
+    "head": (None, MODEL_AXIS),
+    # attention
+    "wq": (None, MODEL_AXIS, None),
+    "wk": (None, MODEL_AXIS, None),
+    "wv": (None, MODEL_AXIS, None),
+    "wo": (MODEL_AXIS, None),
+    # mlp
+    "wi": (None, MODEL_AXIS),
+    "wg": (None, MODEL_AXIS),
+    # moe (3D: d, E, f / f, E, d) — expert parallelism over model axis
+    "moe_wi": (None, MODEL_AXIS, None),
+    "moe_wg": (None, MODEL_AXIS, None),
+    "moe_wo": (None, MODEL_AXIS, None),
+    "router": (None, None),
+    # mla
+    "w_dq": (None, None),
+    "w_uq": (None, MODEL_AXIS, None),
+    "w_dkv": (None, None),
+    "w_uk": (None, MODEL_AXIS, None),
+    "w_uv": (None, MODEL_AXIS, None),
+    # ssm / xlstm
+    "w_in": (None, MODEL_AXIS, None),
+    "w_out": (MODEL_AXIS, None),
+    "w_up": (None, MODEL_AXIS),
+    "w_down": (MODEL_AXIS, None),
+    "w_q": (None, MODEL_AXIS, None),
+    "w_k": (None, MODEL_AXIS, None),
+    "w_v": (None, MODEL_AXIS, None),
+    "w_z": (None, MODEL_AXIS, None),
+    "w_o": (None, MODEL_AXIS, None),
+}
+
+
+def _rule_for(path: Tuple[str, ...], shape: Tuple[int, ...],
+              mesh: Optional[Mesh]) -> P:
+    name = path[-1]
+    parent = path[-2] if len(path) > 1 else ""
+    key = name
+    if parent == "moe" and name in ("wi", "wg", "wo"):
+        key = f"moe_{name}"
+    base = _NAME_RULES.get(key)
+    ndim = len(shape)
+    if base is None or len(base) > ndim:
+        return P()
+    # prepend None for stacked layer dims
+    pad = ndim - len(base)
+    spec = list((None,) * pad + tuple(base))
+    if mesh is not None:
+        for i, ax in enumerate(spec):
+            if ax is not None and (ax not in mesh.axis_names
+                                   or shape[i] % mesh.shape[ax] != 0):
+                spec[i] = None   # replicate non-divisible dims
+    return P(*spec)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def param_specs(params_or_specs, mesh: Optional[Mesh] = None) -> Any:
+    """Pytree of PartitionSpec matching a params pytree (by leaf name);
+    with a mesh, non-divisible dims fall back to replication."""
+    def leaf_spec(path, leaf):
+        return _rule_for(_path_names(path), tuple(leaf.shape), mesh)
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_or_specs)
+
+
+def param_shardings(mesh: Mesh, params_or_specs) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        param_specs(params_or_specs, mesh))
+
+
+# --------------------------------------------------------------------------- #
+def mesh_batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in BATCH_AXES if a in mesh.axis_names)
+
+
+def _batch_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in mesh_batch_axes(mesh)]))
+
+
+def batch_spec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:
+    """Spec for [B, ...] arrays: shard batch over (pod, data) if it
+    divides, else replicate."""
+    ba = mesh_batch_axes(mesh)
+    ok = batch % _batch_size(mesh) == 0
+    return P(ba if ok else None, *([None] * extra_dims))
+
+
+def kv_cache_spec(batch: int, mesh: Mesh, n_kv: int,
+                  seq_len: int = 0) -> P:
+    """[B, S, Kh, hd] caches: batch over (pod, data) when divisible, else
+    sequence; heads over model when divisible — otherwise shard the
+    SEQUENCE over model (flash-decode style: attention reduces partial
+    softmax stats over the model axis).  Without this, GQA models whose
+    kv heads don't divide the model axis (kimi/granite kv=8 vs 16) carry
+    fully replicated caches (57 GB/device for kimi decode_32k)."""
+    ba = mesh_batch_axes(mesh)
+    msz = mesh.shape[MODEL_AXIS]
+    heads_divide = n_kv % msz == 0
+    seq_divides = seq_len > 0 and seq_len % msz == 0
+    if batch % _batch_size(mesh) == 0:
+        if heads_divide:
+            return P(ba, None, MODEL_AXIS, None)
+        if seq_divides:
+            return P(ba, MODEL_AXIS, None, None)
+        return P(ba, None, None, None)
+    if heads_divide:
+        return P(None, ba, MODEL_AXIS, None)
+    if seq_divides:
+        return P(None, (MODEL_AXIS,) + ba, None, None)
+    return P(None, ba, None, None)
+
+
+def latent_cache_spec(batch: int, mesh: Mesh) -> P:
+    """[B, S, R] MLA latent caches (no head dim)."""
+    ba = mesh_batch_axes(mesh)
+    if batch % _batch_size(mesh) == 0:
+        return P(ba, None, None)
+    return P(None, ba, None)
+
+
+def state_cache_spec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """SSM/xLSTM state leaves [B, H, ...]: batch over (pod,data) when
+    divisible, heads over model when divisible."""
+    ba = mesh_batch_axes(mesh)
+    parts = [None] * len(shape)
+    if shape and shape[0] % _batch_size(mesh) == 0:
+        parts[0] = ba
+    if len(shape) > 1 and shape[1] % mesh.shape[MODEL_AXIS] == 0:
+        parts[1] = MODEL_AXIS
+    return P(*parts)

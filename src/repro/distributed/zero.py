@@ -1,0 +1,57 @@
+"""ZeRO-1: shard optimizer state over the data axis.
+
+In GSPMD land, ZeRO-1 is purely a *sharding spec* decision: the AdamW
+moments and the f32 master copy get an extra partitioning over ``data``
+along the first dimension that (a) divides evenly and (b) is not already
+sharded by the tensor-parallel rule.  XLA then emits reduce-scattered
+gradient + all-gathered updated params — the ZeRO-1 communication
+schedule — without any change to the update rule.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .sharding import param_specs
+
+
+def zero_param_spec(spec: P, shape, mesh: Mesh, axis: str = "data") -> P:
+    if axis not in mesh.axis_names:
+        return spec
+    n = mesh.shape[axis]
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (dim, cur) in enumerate(zip(shape, parts)):
+        if cur is None and dim % n == 0 and dim >= n:
+            parts[i] = axis
+            return P(*parts)
+        if cur is not None and not isinstance(cur, tuple) and cur != axis:
+            # combine with existing tensor-parallel axis when divisible
+            ax_total = n * mesh.shape[cur]
+            if dim % ax_total == 0:
+                parts[i] = (cur, axis)
+                return P(*parts)
+    return spec
+
+
+def opt_state_specs(params_tree: Any, mesh: Mesh, enable: bool = True):
+    """Specs for AdamWState(step, mu, nu, master) given a params pytree."""
+    base = param_specs(params_tree, mesh)
+
+    def z(spec, leaf):
+        if not enable:
+            return spec
+        return zero_param_spec(spec, leaf.shape, mesh)
+
+    zspec = jax.tree_util.tree_map(z, base, params_tree)
+    from repro.optim import AdamWState
+    return AdamWState(step=P(), mu=zspec, nu=zspec, master=zspec)
+
+
+def opt_state_shardings(params_tree: Any, mesh: Mesh, enable: bool = True):
+    specs = opt_state_specs(params_tree, mesh, enable)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,106 @@
+"""Flash attention Pallas kernel (TPU target; hymba/granite prefill+train
+hot spot — see EXPERIMENTS.md §Perf).
+
+Rationale from the dry-run byte attribution: the pure-XLA chunked
+attention still writes/reads the [B, H, c, T] score chain through HBM
+(~40% of hymba train_4k's memory term).  The flash formulation keeps
+score tiles in VMEM — HBM traffic reduces to Q/K/V/O — which is the
+classic reason this kernel exists on TPU.
+
+Layout: q [B, H, Tq, d], k/v [B, H, Tk, d] (GQA callers repeat or reshape
+heads).  Grid (B*H, Tq/bq); the kernel loops KV blocks with the online
+max/sum recurrence, f32 accumulators in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  bq: int, bk: int, kv_len: int, causal: bool,
+                  scale: float):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale          # [bq, d]
+    n_kv = kv_len // bk
+
+    m_ref[...] = jnp.full_like(m_ref, NEG)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def body(j, _):
+        k_blk = pl.load(k_ref, (0, pl.ds(j * bk, bk),
+                                slice(None))).astype(jnp.float32)
+        v_blk = pl.load(v_ref, (0, pl.ds(j * bk, bk),
+                                slice(None))).astype(jnp.float32)
+        s = jnp.dot(q, k_blk.T,
+                    preferred_element_type=jnp.float32)   # [bq, bk]
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 0)
+            kpos = j * bk + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1,
+                                                  keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v_blk, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        return 0
+
+    # causal: skip kv blocks strictly after this q block
+    upper = n_kv if not causal else \
+        jnp.minimum(n_kv, (qi + 1) * bq // bk + (1 if bq % bk else 0))
+    upper = jnp.maximum(upper, 1)
+    jax.lax.fori_loop(0, upper, body, 0)
+    o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bq", "bk", "causal", "interpret", "out_dtype"))
+def flash_attention(
+    q: jnp.ndarray,          # [BH, Tq, d]
+    k: jnp.ndarray,          # [BH, Tk, d]
+    v: jnp.ndarray,          # [BH, Tk, d]
+    *,
+    bq: int = 128,
+    bk: int = 128,
+    causal: bool = True,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jnp.ndarray:
+    bh, tq, d = q.shape
+    _, tk, _ = k.shape
+    assert tq % bq == 0 and tk % bk == 0, (q.shape, k.shape, bq, bk)
+    out_dtype = out_dtype or q.dtype
+    grid = (bh, tq // bq)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, kv_len=tk,
+                          causal=causal, scale=d ** -0.5),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, tk, d), lambda h, i: (h, 0, 0)),
+            pl.BlockSpec((1, tk, d), lambda h, i: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, tq, d), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,66 @@
+"""GEMM-mode Pallas kernel (ACK GEMM mode, paper Alg. 1).
+
+Output-stationary blocked matmul targeting the TPU MXU:
+  grid = (M/bm, N/bn, K/bk); x tile (bm, bk) and w tile (bk, bn) stream
+  through VMEM; an f32 accumulator lives in VMEM scratch and is flushed to
+  the output tile on the last K step.  Block shapes default to MXU-aligned
+  multiples of 128 (the paper's p_sys x p_sys systolic tile, scaled to the
+  TPU's native 128x128 systolic array).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bk", "bn", "interpret", "out_dtype"))
+def gemm(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    bn: int = 128,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """x: [M, K] @ w: [K, N] -> [M, N].  Shapes must divide block sizes
+    (ops.gemm pads arbitrary shapes)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (x.shape, w.shape)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

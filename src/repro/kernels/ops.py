@@ -1,0 +1,73 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These pad arbitrary shapes up to block multiples, invoke the kernel, and
+slice back — so the ACK can call them with the compiler's native tile
+shapes.  ``interpret=True`` executes the kernel body in Python on CPU
+(correctness path in this container); on a real TPU, interpret=False
+lowers through Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import gemm as _gemm
+from . import sddmm as _sddmm
+from . import spdmm as _spdmm
+
+_LANE = 128
+
+
+def _pad_to(x: jnp.ndarray, mults) -> jnp.ndarray:
+    pads = []
+    for dim, mult in zip(x.shape, mults):
+        target = (dim + mult - 1) // mult * mult
+        pads.append((0, target - dim))
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "bm", "bk", "bn"))
+def gemm(x, w, *, interpret: bool = True, bm: int = 128, bk: int = 128,
+         bn: int = 128):
+    m, n = x.shape[0], w.shape[1]
+    bm_, bk_, bn_ = (min(bm, _ceil(x.shape[0])), min(bk, _ceil(x.shape[1])),
+                     min(bn, _ceil(w.shape[1])))
+    xp = _pad_to(x, (bm_, bk_))
+    wp = _pad_to(w, (bk_, bn_))
+    out = _gemm.gemm(xp, wp, bm=bm_, bk=bk_, bn=bn_, interpret=interpret)
+    return out[:m, :n]
+
+
+def _ceil(d: int, base: int = 8) -> int:
+    """Smallest multiple of ``base`` >= d, capped to 128 for block picks."""
+    t = (d + base - 1) // base * base
+    return min(t, 128)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "bm", "bf"))
+def spdmm(cols, vals, h, *, interpret: bool = True, bm: int = 128,
+          bf: int = 128):
+    n1, f = cols.shape[0], h.shape[1]
+    bm_, bf_ = min(bm, _ceil(n1)), min(bf, _ceil(f))
+    colsp = _pad_to(cols, (bm_, 1))
+    valsp = _pad_to(vals, (bm_, 1))
+    hp = _pad_to(h, (1, bf_))
+    out = _spdmm.spdmm(colsp, valsp, hp, bm=bm_, bf=bf_, interpret=interpret)
+    return out[:n1, :f]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "bm", "bf"))
+def sddmm(h_dst, h_src, cols, *, interpret: bool = True, bm: int = 128,
+          bf: int = 128):
+    n1, w = cols.shape
+    f = h_dst.shape[1]
+    bm_, bf_ = min(bm, _ceil(n1)), min(bf, _ceil(f))
+    hd = _pad_to(h_dst, (bm_, bf_))
+    hs = _pad_to(h_src, (1, bf_))
+    colsp = _pad_to(cols, (bm_, 1))
+    out = _sddmm.sddmm(hd, hs, colsp, bm=bm_, bf=bf_, interpret=interpret)
+    return out[:n1, :w]

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gemm_ref(x: jnp.ndarray, w: jnp.ndarray,
+             out_dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def spdmm_ref(cols: jnp.ndarray, vals: jnp.ndarray, h: jnp.ndarray,
+              out_dtype=jnp.float32) -> jnp.ndarray:
+    """out[r] = sum_k vals[r,k] * h[cols[r,k]].  Zero-padded entries
+    (vals == 0) contribute nothing, so no mask is needed."""
+    gathered = h.astype(jnp.float32)[cols]              # [n1, w, f]
+    out = jnp.sum(gathered * vals[..., None].astype(jnp.float32), axis=1)
+    return out.astype(out_dtype)
+
+
+def sddmm_ref(h_dst: jnp.ndarray, h_src: jnp.ndarray, cols: jnp.ndarray,
+              out_dtype=jnp.float32) -> jnp.ndarray:
+    """score[r,k] = <h_dst[r], h_src[cols[r,k]]> (pad entries score the
+    gathered row 0 — callers mask with edge validity)."""
+    gathered = h_src.astype(jnp.float32)[cols]          # [n1, w, f]
+    out = jnp.einsum("rwf,rf->rw", gathered, h_dst.astype(jnp.float32))
+    return out.astype(out_dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        scale: float | None = None) -> jnp.ndarray:
+    """[T, H, D] single-sequence attention oracle (f32 math)."""
+    q, k, v = (a.astype(jnp.float32) for a in (q, k, v))
+    t, h, d = q.shape
+    s = jnp.einsum("qhd,khd->hqk", q, k) * (scale or d ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("hqk,khd->qhd", p, v)

@@ -1,0 +1,70 @@
+"""SpDMM-mode Pallas kernel (ACK SpDMM mode, paper Alg. 2/4).
+
+Blocked-ELL sparse x dense:   out[r, :] = sum_k vals[r, k] * h[cols[r, k], :]
+
+TPU adaptation (DESIGN.md §2): the compiler delivers each adjacency
+sub-shard as a dst-sorted ELL tile, so each output row is owned by exactly
+one kernel lane group — the FPGA's RAW-reorder hardware becomes a compile
+time sort, and the banked-SRAM shuffle becomes a VMEM row gather
+(``jnp.take`` along the sublane axis, Mosaic's dynamic-gather path).
+
+Grid: (row blocks, feature fibers).  The source-feature tile for one fiber
+is held whole in VMEM ((n_src, bf) — bounded by the partition pass's VMEM
+budget); the kernel walks the ELL width serially, one gathered
+rank-(bm, bf) multiply-add per step: exactly 2*nnz_padded*bf flops — the
+edge-centric work of the paper, vectorized across lanes instead of across
+p_sys/2 UR pipelines.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spdmm_kernel(cols_ref, vals_ref, h_ref, o_ref, *, width: int):
+    # Each (row-block, fiber) grid cell is independent: accumulate the ELL
+    # width serially in registers/VMEM and write once.
+    h = h_ref[...].astype(jnp.float32)
+
+    def body(k, acc):
+        c = cols_ref[:, k]                       # [bm] int32 row gather
+        hv = jnp.take(h, c, axis=0)              # [bm, bf]
+        return acc + vals_ref[:, k][:, None].astype(jnp.float32) * hv
+
+    acc = jax.lax.fori_loop(
+        0, width, body, jnp.zeros(o_ref.shape, jnp.float32))
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bf", "interpret", "out_dtype"))
+def spdmm(
+    cols: jnp.ndarray,       # [n1, w] int32 local src indices (0 padded)
+    vals: jnp.ndarray,       # [n1, w] f32 edge weights (0 padded)
+    h: jnp.ndarray,          # [n_src, f] source feature tile
+    *,
+    bm: int = 128,
+    bf: int = 128,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jnp.ndarray:
+    n1, w = cols.shape
+    n_src, f = h.shape
+    assert n1 % bm == 0 and f % bf == 0, (cols.shape, h.shape)
+    grid = (n1 // bm, f // bf)
+    return pl.pallas_call(
+        functools.partial(_spdmm_kernel, width=w),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((n_src, bf), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bf), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n1, f), out_dtype),
+        interpret=interpret,
+    )(cols, vals, h)

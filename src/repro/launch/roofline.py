@@ -1,0 +1,150 @@
+"""Roofline report: aggregate dry-run artifacts into the §Dry-run and
+§Roofline tables of EXPERIMENTS.md.
+
+  PYTHONPATH=src python -m repro.launch.roofline [--dir artifacts/dryrun]
+
+Per (arch x shape x mesh): the three roofline terms (seconds), the
+dominant term, MODEL_FLOPS (6*N*D train / 2*N*D decode+prefill, N =
+active params), the useful-compute ratio MODEL_FLOPS / HLO_FLOPs, and a
+one-line "what would move the dominant term" note.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12     # bf16 / chip (TPU v5e)
+HBM_BW = 819e9          # B/s / chip
+ICI_BW = 50e9           # B/s / link
+
+_MOVE_NOTES = {
+    "compute_s": ("raise MXU utilization: larger per-device batch or "
+                  "less recompute (remat policy)"),
+    "memory_s": ("cut HBM traffic: fuse epilogues, chunk the loss, "
+                 "avoid f32 round-trips, smaller attention chunks"),
+    "collective_s": ("reshard to cut collectives: different einsum "
+                     "order, overlap a2a with expert compute, "
+                     "hierarchical reduction over pod axis"),
+}
+
+
+def model_flops(rec: Dict) -> float:
+    n_active = rec.get("n_active_params", 0)
+    if rec["kind"] == "train":
+        return 6.0 * n_active * rec["tokens"]
+    if rec["kind"] == "prefill":
+        return 2.0 * n_active * rec["tokens"]
+    # decode: one token per sequence in the batch
+    return 2.0 * n_active * rec["tokens"]
+
+
+def load(art_dir: str, mesh: Optional[str] = None) -> List[Dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        if "__naive" in f or "__tag" in f:
+            continue
+        r = json.load(open(f))
+        if mesh and r.get("mesh") != mesh:
+            continue
+        out.append(r)
+    return out
+
+
+def fmt_row(r: Dict) -> str:
+    if r.get("skipped"):
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                f"skip: {r['skipped'][:42]}… |")
+    if r.get("status") != "ok":
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                f"ERROR |")
+    rf = r["roofline"]
+    mf = model_flops(r)
+    n_dev = r["n_devices"]
+    hlo_flops_total = r["analysis"]["flops_per_device"] * n_dev
+    ratio = mf / hlo_flops_total if hlo_flops_total else 0.0
+    dom = rf["dominant"].replace("_s", "")
+    mem_gib = r["memory"]["per_device_total"] / 2 ** 30
+    return (f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.4f} | "
+            f"{rf['memory_s']:.4f} | {rf['collective_s']:.4f} | "
+            f"**{dom}** | {ratio:.2f} | {mem_gib:.1f} GiB |")
+
+
+def dominant_note(r: Dict) -> str:
+    return _MOVE_NOTES[r["roofline"]["dominant"]]
+
+
+def report(art_dir: str) -> str:
+    lines = []
+    lines.append("### Single-pod (16x16 = 256 chips) roofline, "
+                 "per (arch x shape)\n")
+    lines.append("| arch | shape | compute (s) | memory (s) | "
+                 "collective (s) | bottleneck | 6ND/HLO | mem/dev |")
+    lines.append("|---|---|---|---|---|---|---|---|")
+    for r in load(art_dir, "single"):
+        lines.append(fmt_row(r))
+    lines.append("")
+    lines.append("### Multi-pod (2x16x16 = 512 chips) — compile proof + "
+                 "roofline\n")
+    lines.append("| arch | shape | compute (s) | memory (s) | "
+                 "collective (s) | bottleneck | 6ND/HLO | mem/dev |")
+    lines.append("|---|---|---|---|---|---|---|---|")
+    for r in load(art_dir, "multi"):
+        lines.append(fmt_row(r))
+    return "\n".join(lines)
+
+
+def reanalyze(art_dir: str) -> None:
+    """Re-run the HLO static analysis from stored .hlo.gz artifacts
+    (analyzer improvements without recompiling 80 cells)."""
+    import gzip
+
+    from repro.launch.hlo_analysis import analyze
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            continue
+        hp = f.replace(".json", ".hlo.gz")
+        if not os.path.exists(hp):
+            continue
+        with gzip.open(hp, "rt") as fh:
+            hlo = fh.read()
+        costs = analyze(hlo, r["n_devices"])
+        r["analysis"] = {
+            "flops_per_device": costs.flops,
+            "hbm_bytes_per_device": costs.hbm_bytes,
+            "collective_bytes_per_device": costs.collective_bytes,
+            "total_collective_bytes_per_device":
+                costs.total_collective_bytes,
+            "unknown_trip_whiles": costs.unknown_trip_whiles,
+        }
+        r["roofline"] = {
+            "compute_s": costs.flops / PEAK_FLOPS,
+            "memory_s": costs.hbm_bytes / HBM_BW,
+            "collective_s": costs.total_collective_bytes / ICI_BW,
+        }
+        r["roofline"]["dominant"] = max(
+            ("compute_s", "memory_s", "collective_s"),
+            key=r["roofline"].get)
+        with open(f, "w") as fh:
+            json.dump(r, fh, indent=1)
+        print(f"[reanalyzed] {os.path.basename(f)}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "artifacts",
+        "dryrun"))
+    ap.add_argument("--reanalyze", action="store_true")
+    args = ap.parse_args()
+    if args.reanalyze:
+        reanalyze(args.dir)
+        return
+    print(report(args.dir))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Training driver: data pipeline -> sharded train loop -> checkpoints.
+
+Runs real steps at smoke scale on CPU and is the template for pod scale:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt --resume auto
+
+Fault tolerance: checkpoints are atomic (checkpoint/ckpt.py); ``--resume
+auto`` restarts from the last complete step; ``--crash-at N`` simulates a
+node failure mid-run (used by tests/test_train_loop.py to verify
+loss-curve continuity across a crash/restart).  On a real cluster this
+process runs once per host with jax.distributed.initialize(); elastic
+re-mesh = restore onto whatever mesh the relaunch got (checkpoints are
+host-gathered and mesh-free).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore, save
+from repro.configs import get_config, get_smoke_config
+from repro.data import synthetic_batches
+from repro.distributed import sharding as SH
+from repro.distributed.compression import ef_transform, init_error_feedback
+from repro.launch.mesh import make_local_mesh
+from repro.models.steps import (build_model, init_train_state,
+                                make_train_step)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", default="no", choices=["no", "auto"])
+    ap.add_argument("--crash-at", type=int, default=-1,
+                    help="simulate a failure after this step (testing)")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--data-seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = dataclasses.replace(cfg, dtype="float32") if args.smoke else cfg
+    model = build_model(cfg)
+    train_step = make_train_step(model, cfg, base_lr=args.lr)
+
+    def train_step_compressed(params, opt_state, ef, batch):
+        # error-feedback int8 gradient path (see compression.py)
+        from repro.models.layers import softmax_xent
+        from repro.optim import adamw_update, cosine_schedule
+
+        def loss_fn(p):
+            logits, aux = model.forward(p, batch["tokens"])
+            return softmax_xent(logits, batch["labels"]) \
+                + cfg.router_aux_coef * aux
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads, ef = ef_transform(grads, ef)
+        lr = cosine_schedule(opt_state.step, args.lr)
+        params, opt_state = adamw_update(params, grads, opt_state, lr)
+        return params, opt_state, ef, {"loss": loss, "lr": lr,
+                                       "aux": jnp.zeros(())}
+
+    params, opt_state = init_train_state(model, jax.random.PRNGKey(0))
+    start = 0
+    if args.resume == "auto" and args.ckpt_dir:
+        last = latest_step(args.ckpt_dir)
+        if last is not None:
+            (params, opt_state), start, meta = restore(
+                args.ckpt_dir, (params, opt_state))
+            print(f"[resume] restored step {start} "
+                  f"(loss was {meta.get('loss')})", flush=True)
+
+    if args.compress_grads:
+        jstep = jax.jit(train_step_compressed, donate_argnums=(0, 1, 2))
+    else:
+        jstep = jax.jit(train_step, donate_argnums=(0, 1))
+    it = synthetic_batches(cfg, args.batch, args.seq, seed=args.data_seed)
+    ef = init_error_feedback(params) if args.compress_grads else None
+
+    # fast-forward the data stream for determinism across restarts
+    for _ in range(start):
+        next(it)
+
+    t0 = time.time()
+    loss_val = float("nan")
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        if args.compress_grads:
+            params, opt_state, ef, metrics = jstep(params, opt_state, ef,
+                                                   batch)
+        else:
+            params, opt_state, metrics = jstep(params, opt_state, batch)
+        if (step + 1) % args.log_every == 0 or step == start:
+            loss_val = float(metrics["loss"])
+            dt = time.time() - t0
+            print(f"step {step + 1:5d} loss {loss_val:8.4f} "
+                  f"lr {float(metrics['lr']):.2e} ({dt:.1f}s)", flush=True)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            save(args.ckpt_dir, step + 1, (params, opt_state),
+                 meta={"loss": float(metrics["loss"]),
+                       "arch": args.arch})
+        if args.crash_at == step + 1:
+            print(f"[crash] simulated failure at step {step + 1}",
+                  flush=True)
+            os._exit(42)
+    print(f"done: {args.steps} steps, final loss {loss_val:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,193 @@
+"""GQA attention: full / sliding-window / cross, with query-chunked
+online-softmax (XLA flash analogue) for long sequences, plus decode-step
+attention against a KV cache.
+
+Shapes: x [B, T, D]; q [B, T, H, hd]; kv [B, S, Kh, hd].  GQA groups
+G = H // Kh query heads per KV head.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense_init, rms_norm, rope
+
+NEG = -2.0e38
+
+
+def attn_init(key, d_model: int, n_heads: int, n_kv: int, hd: int, dtype,
+              qk_norm: bool = False, kv_input_dim: Optional[int] = None
+              ) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    kvd = kv_input_dim or d_model
+    p = {
+        "wq": dense_init(kq, d_model, (n_heads, hd), dtype),
+        "wk": dense_init(kk, kvd, (n_kv, hd), dtype),
+        "wv": dense_init(kv, kvd, (n_kv, hd), dtype),
+        "wo": dense_init(ko, n_heads * hd, d_model, dtype,
+                         std=(n_heads * hd) ** -0.5),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _qk_normalize(p: Params, q, k, eps):
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], eps)
+        k = rms_norm(k, p["k_norm"], eps)
+    return q, k
+
+
+def _mask_bias(qpos, kpos, causal: bool, window: int) -> jnp.ndarray:
+    """[Tq, Tk] additive bias from causal/sliding-window visibility."""
+    dif = qpos[:, None] - kpos[None, :]
+    ok = jnp.ones(dif.shape, bool)
+    if causal:
+        ok &= dif >= 0
+    if window > 0:
+        ok &= dif < window
+    return jnp.where(ok, 0.0, NEG)
+
+
+def _sdpa(q, k, v, bias, scale):
+    """q [B,Tq,H,hd], k/v [B,Tk,Kh,hd] -> [B,Tq,H,hd] (f32 softmax)."""
+    b, tq, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, tq, kh, g, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = s + bias
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, tq, h, hd).astype(q.dtype)
+
+
+def _sdpa_chunked(q, k, v, qpos, kpos, causal, window, scale, chunk: int):
+    """Query-chunked online-softmax attention (bounded memory; the pure-XLA
+    analogue of flash attention; exact).
+
+    Perf notes (EXPERIMENTS.md §Perf, hymba train_4k iteration):
+      * the chunk body is rematerialized — without it, backward saves the
+        full [n_chunks, B, H, c, T] probability stack to HBM;
+      * the softmax normalizer divides the (narrow) output, not the
+        (T-wide) probability tensor: ~T/hd x less traffic for that op;
+      * probabilities are cast to the value dtype (bf16) for the PV
+        matmul with f32 accumulation — halves the widest read.
+    """
+    b, t, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    n_chunks = t // chunk
+    qg = q.reshape(b, n_chunks, chunk, kh, g, hd).swapaxes(0, 1)
+    qpos_c = qpos.reshape(n_chunks, chunk)
+
+    @jax.checkpoint
+    def one_chunk(qc, pc):
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qc, k,
+                       preferred_element_type=jnp.float32) * scale
+        s = s + _mask_bias(pc, kpos, causal, window)
+        m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), -1e30)
+        e = jnp.exp(s - m)
+        den = jnp.sum(e, axis=-1, keepdims=True)
+        o = jnp.einsum("bkgqs,bskd->bkgqd", e.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        return o / jnp.maximum(den, 1e-30)  # [b,kh,g,chunk,hd]
+
+    o = jax.lax.map(lambda args: one_chunk(*args), (qg, qpos_c))
+    # [n_chunks, b, kh, g, chunk, hd] -> [b, t, h, hd]
+    o = o.transpose(1, 0, 4, 2, 3, 5).reshape(b, t, h, hd)
+    return o.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+def attention(p: Params, x: jnp.ndarray, positions: jnp.ndarray, *,
+              causal: bool = True, window: int = 0,
+              rope_theta: float = 1e4, eps: float = 1e-6,
+              chunk: int = 0, kv_x: Optional[jnp.ndarray] = None,
+              use_rope: bool = True) -> jnp.ndarray:
+    """Self (or cross, via kv_x) attention over a full sequence."""
+    q = jnp.einsum("btd,dhe->bthe", x, p["wq"])
+    src = x if kv_x is None else kv_x
+    k = jnp.einsum("bsd,dke->bske", src, p["wk"])
+    v = jnp.einsum("bsd,dke->bske", src, p["wv"])
+    q, k = _qk_normalize(p, q, k, eps)
+    hd = q.shape[-1]
+    if use_rope and kv_x is None:
+        q = rope(q, positions, rope_theta)
+        k = rope(k, positions, rope_theta)
+    kpos = (positions if kv_x is None
+            else jnp.arange(src.shape[1], dtype=jnp.int32))
+    scale = hd ** -0.5
+    t = x.shape[1]
+    if chunk and t > chunk and t % chunk == 0:
+        o = _sdpa_chunked(q, k, v, positions, kpos,
+                          causal and kv_x is None, window, scale, chunk)
+    else:
+        bias = _mask_bias(positions, kpos, causal and kv_x is None, window)
+        o = _sdpa(q, k, v, bias, scale)
+    h = q.shape[2]
+    return jnp.einsum("bthe,hed->btd", o, p["wo"].reshape(h, hd, -1))
+
+
+# --------------------------------------------------------------------------- #
+# KV-cache decode path.
+# --------------------------------------------------------------------------- #
+def init_cache(batch: int, max_len: int, n_kv: int, hd: int, dtype
+               ) -> Dict[str, jnp.ndarray]:
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv, hd), dtype),
+    }
+
+
+def decode_attention(p: Params, x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+                     pos: jnp.ndarray, *, window: int = 0,
+                     rope_theta: float = 1e4, eps: float = 1e-6,
+                     cross: bool = False) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step.  x [B, 1, D]; cache k/v [B, S, Kh, hd];
+    pos: scalar int32 current position.  Returns (out [B,1,D], cache)."""
+    q = jnp.einsum("btd,dhe->bthe", x, p["wq"])
+    hd = q.shape[-1]
+    if cross:
+        # Cross-attention cache holds the projected encoder K/V (static).
+        k, v = cache["k"], cache["v"]
+        valid = jnp.ones((k.shape[1],), bool)
+    else:
+        knew = jnp.einsum("btd,dke->btke", x, p["wk"])
+        vnew = jnp.einsum("btd,dke->btke", x, p["wv"])
+        q, knew = _qk_normalize(p, q, knew, eps)
+        posv = jnp.full((x.shape[0], 1), pos, jnp.int32)
+        q = rope(q, posv, rope_theta)
+        knew = rope(knew, posv, rope_theta)
+        s_len = cache["k"].shape[1]
+        slot = pos % s_len   # ring buffer; full caches have s_len > pos
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], knew.astype(cache["k"].dtype), slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], vnew.astype(cache["v"].dtype), slot, axis=1)
+        cache = {"k": k, "v": v}
+        # Ring-buffer slot -> absolute position (wraps for window caches);
+        # unwritten slots map to negative positions (invalid).
+        slots = jnp.arange(s_len, dtype=jnp.int32)
+        abs_pos = pos - ((pos - slots) % s_len)
+        valid = (abs_pos >= 0) & (abs_pos <= pos)
+        if window > 0:
+            valid &= abs_pos > pos - window
+    b, _, h, _ = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, 1, kh, g, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (hd ** -0.5)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", pr, v.astype(jnp.float32))
+    o = o.reshape(b, 1, h, hd).astype(x.dtype)
+    return jnp.einsum("bthe,hed->btd", o,
+                      p["wo"].reshape(h, hd, -1)), cache

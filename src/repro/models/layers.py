@@ -1,0 +1,85 @@
+"""Shared neural layers: norms, RoPE, MLP, initializers.
+
+Pure-function style: params are dict pytrees; init functions take an
+``jax.random`` key; every apply function is shape-polymorphic over leading
+batch dims.  f32 accumulation for norms/softmax; storage dtype from config.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def _normal(key, shape, std, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out, dtype, std: Optional[float] = None):
+    shape = (d_in,) + ((d_out,) if isinstance(d_out, int) else tuple(d_out))
+    std = std if std is not None else d_in ** -0.5
+    return _normal(key, shape, std, dtype)
+
+
+# --------------------------------------------------------------------------- #
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray,
+             eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------------- #
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary embedding.  x: [..., T, H, D]; positions: [..., T]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freq
+    sin, cos = jnp.sin(ang), jnp.cos(ang)          # [..., T, 1, half]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin
+    y2 = x2.astype(jnp.float32) * cos + x1.astype(jnp.float32) * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+def swiglu_init(key, d: int, f: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, d, f, dtype),
+        "wg": dense_init(k2, d, f, dtype),
+        "wo": dense_init(k3, f, d, dtype),
+    }
+
+
+def swiglu(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jnp.einsum("...d,df->...f", x, p["wi"])
+    g = jnp.einsum("...d,df->...f", x, p["wg"])
+    h = h * jax.nn.sigmoid(g.astype(jnp.float32)).astype(h.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean token cross-entropy; f32 logsumexp."""
+    lg = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    ll = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)

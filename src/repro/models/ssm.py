@@ -1,0 +1,166 @@
+"""Selective SSM head (Mamba-style), for the Hymba hybrid architecture.
+
+Per head: state h in R^{P x N} (P = head dim, N = ssm_state).
+  h_t = exp(-softplus(dt_t) * A) * h_{t-1} + dt_t * (x_t outer B_t)
+  y_t = h_t C_t + D * x_t
+with input-dependent dt [B,T,H], B,C [B,T,N] (shared across heads, as in
+Mamba), A [H] positive per head.  The sequence dimension is parallelized
+with an associative scan of (decay, update) pairs — the TPU-native
+formulation (no serial recurrence in train/prefill); decode carries the
+(B,H,P,N) state one step.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense_init
+
+
+def ssm_init(key, d: int, n_heads: int, head_dim: int, state: int,
+             dtype) -> Params:
+    kx, kb, kc, kd, kA, ko = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(kx, d, (n_heads, head_dim), dtype),
+        "w_bc": dense_init(kb, d, 2 * state, dtype),
+        "w_dt": dense_init(kc, d, n_heads, dtype),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32) * 0.1,
+        "w_out": dense_init(ko, n_heads * head_dim, d, dtype),
+    }
+
+
+def _gates(p: Params, x: jnp.ndarray, state: int):
+    xs = jnp.einsum("btd,dhe->bthe", x, p["w_in"])       # [B,T,H,P]
+    bc = jnp.einsum("btd,dn->btn", x, p["w_bc"]).astype(jnp.float32)
+    Bm, Cm = bc[..., :state], bc[..., state:]            # [B,T,N]
+    dt = jax.nn.softplus(
+        jnp.einsum("btd,dh->bth", x, p["w_dt"]).astype(jnp.float32)
+        + p["dt_bias"])                                  # [B,T,H]
+    A = jnp.exp(p["A_log"])                              # [H] > 0
+    decay = jnp.exp(-dt * A)                             # [B,T,H]
+    return xs, Bm, Cm, dt, decay
+
+
+def ssm_scan(p: Params, x: jnp.ndarray, state: int,
+             chunk: int = 256) -> jnp.ndarray:
+    """Full-sequence selective scan, *chunkwise-parallel* (mamba2-style):
+    a serial lax.scan over chunks carries the (B,H,P,N) state; within a
+    chunk an associative scan runs in parallel.  Peak memory is
+    O(B * chunk * H * P * N) instead of O(B * T * H * P * N) — the naive
+    whole-sequence associative scan put hymba train_4k at 153 GiB/device.
+    x [B,T,D] -> y [B,T,D]."""
+    xs, Bm, Cm, dt, decay = _gates(p, x, state)
+    u = (dt[..., None, None] * xs.astype(jnp.float32)[..., None]
+         * Bm[:, :, None, None, :])                       # [B,T,H,P,N]
+    b, t, h, pdim, n = u.shape
+    if t % chunk != 0 or t <= chunk:
+        chunk = t
+    nc = t // chunk
+    u_c = u.reshape(b, nc, chunk, h, pdim, n).swapaxes(0, 1)
+    a_c = decay.reshape(b, nc, chunk, h).swapaxes(0, 1)
+    c_c = Cm.reshape(b, nc, chunk, n).swapaxes(0, 1)
+
+    def combine(c1, c2):
+        a1, u1 = c1
+        a2, u2 = c2
+        return a1 * a2, u1 * a2[..., None, None] + u2
+
+    def chunk_step(h0, args):
+        ac, uc, cc = args                     # [B,c,H], [B,c,H,P,N], [B,c,N]
+        _, h_loc = jax.lax.associative_scan(combine, (ac, uc), axis=1)
+        carry_f = jnp.exp(jnp.cumsum(jnp.log(jnp.maximum(ac, 1e-38)),
+                                     axis=1))              # prod of decays
+        h_all = h_loc + carry_f[..., None, None] * h0[:, None]
+        y = jnp.einsum("bthpn,btn->bthp", h_all, cc)
+        return h_all[:, -1], y
+
+    h0 = jnp.zeros((b, h, pdim, n), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, h0, (a_c, u_c, c_c))
+    y = ys.swapaxes(0, 1).reshape(b, t, h, pdim)
+    y = y + p["D"][:, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, t, h * pdim).astype(x.dtype)
+    return jnp.einsum("btf,fd->btd", y, p["w_out"].reshape(h * pdim, -1))
+
+
+def ssm_scan_ssd(p: Params, x: jnp.ndarray, state: int,
+                 chunk: int = 256) -> jnp.ndarray:
+    """SSD (mamba-2 duality) form of the selective scan.
+
+    The chunked associative scan still materializes the (B,chunk,H,P,N)
+    state sequence — P*N/1 = 1024x the token width for hymba — which made
+    the hymba train_4k cell memory-bound at 2% of roofline.  The dual
+    form never materializes per-step states:
+
+      y_t = sum_{j<=t} [ (C_t . B_j) dt_j exp(L_t - L_j) ] x_j
+            + exp(L_t) (C_t . h0)                       (carry-in term)
+
+    with L = cumsum(log decay).  Peak intermediate = the (B,c,c,H) score
+    tile (attention-like); states exist only at chunk boundaries.
+    Identical math; extra O(c^2 (1 + P) H) flops per chunk — the classic
+    SSD memory/compute trade, correct for a memory-bound cell.
+    """
+    xs, Bm, Cm, dt, decay = _gates(p, x, state)
+    b, t, h, pdim = xs.shape
+    if t % chunk != 0 or t <= chunk:
+        chunk = t
+    nc = t // chunk
+    xf = xs.astype(jnp.float32)
+    logd = jnp.log(jnp.maximum(decay, 1e-38))          # = -dt * A
+    L = jnp.cumsum(logd.reshape(b, nc, chunk, h), axis=2)  # per chunk
+    x_c = xf.reshape(b, nc, chunk, h, pdim).swapaxes(0, 1)
+    B_c = Bm.reshape(b, nc, chunk, state).swapaxes(0, 1)
+    C_c = Cm.reshape(b, nc, chunk, state).swapaxes(0, 1)
+    dt_c = dt.reshape(b, nc, chunk, h).swapaxes(0, 1)
+    L_c = L.swapaxes(0, 1)                                 # [nc,B,c,H]
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_step(h0, args):
+        xc, bc, cc, dtc, lc = args
+        # intra-chunk: scores S[t,j] = (C_t.B_j) dt_j exp(L_t - L_j)
+        cb = jnp.einsum("btn,bjn->btj", cc, bc)            # [B,c,c]
+        dec = jnp.exp(jnp.clip(lc[:, :, None] - lc[:, None, :],
+                               -60.0, 0.0))                # [B,c,c,H]
+        s = cb[..., None] * dtc[:, None] * dec
+        s = jnp.where(mask[None, :, :, None], s, 0.0)
+        y = jnp.einsum("btjh,bjhp->bthp", s, xc)
+        # carry-in: exp(L_t) (C_t . h0)
+        ch0 = jnp.einsum("btn,bhpn->bthp", cc, h0)
+        y = y + jnp.exp(lc)[..., None] * ch0
+        # chunk-boundary state
+        l_end = lc[:, -1]                                  # [B,H]
+        w = dtc * jnp.exp(jnp.clip(l_end[:, None] - lc, -60.0, 0.0))
+        h_new = jnp.einsum("bjh,bjhp,bjn->bhpn", w, xc, bc)
+        h_new = h_new + jnp.exp(l_end)[..., None, None] * h0
+        return h_new, y
+
+    h0 = jnp.zeros((b, h, pdim, state), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, h0, (x_c, B_c, C_c, dt_c, L_c))
+    y = ys.swapaxes(0, 1).reshape(b, t, h, pdim)
+    y = y + p["D"][:, None] * xf
+    y = y.reshape(b, t, h * pdim).astype(x.dtype)
+    return jnp.einsum("btf,fd->btd", y, p["w_out"].reshape(h * pdim, -1))
+
+
+def ssm_decode_init(batch: int, n_heads: int, head_dim: int, state: int
+                    ) -> jnp.ndarray:
+    return jnp.zeros((batch, n_heads, head_dim, state), jnp.float32)
+
+
+def ssm_decode_step(p: Params, x: jnp.ndarray, h: jnp.ndarray, state: int
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One token.  x [B,1,D]; h [B,H,P,N]."""
+    xs, Bm, Cm, dt, decay = _gates(p, x, state)
+    u = (dt[..., None, None] * xs.astype(jnp.float32)[..., None]
+         * Bm[:, :, None, None, :])[:, 0]
+    h = h * decay[:, 0][..., None, None] + u
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm[:, 0])
+    y = y + p["D"][:, None] * xs[:, 0].astype(jnp.float32)
+    b, hh, pdim = y.shape
+    y = y.reshape(b, 1, hh * pdim).astype(x.dtype)
+    return jnp.einsum("btf,fd->btd", y,
+                      p["w_out"].reshape(hh * pdim, -1)), h

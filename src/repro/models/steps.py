@@ -1,0 +1,117 @@
+"""Step factories: train_step / prefill / serve_step for any arch.
+
+These are the functions the dry-run lowers and the examples execute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+
+from .config import ModelConfig, ShapeCell
+from .layers import softmax_xent
+from .transformer import DecoderLM
+from .whisper import WhisperModel
+
+
+def build_model(cfg: ModelConfig, moe_impl: str = "dense", mesh=None):
+    if cfg.encoder_decoder:
+        return WhisperModel(cfg, moe_impl=moe_impl, mesh=mesh)
+    return DecoderLM(cfg, moe_impl=moe_impl, mesh=mesh)
+
+
+# --------------------------------------------------------------------------- #
+def make_train_step(model, cfg: ModelConfig, base_lr: float = 3e-4,
+                    keep_master: bool = True):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch):
+        if cfg.encoder_decoder:
+            logits, aux = model.forward(params, batch["frames"],
+                                        batch["targets"])
+            labels = batch["target_labels"]
+        elif cfg.cross_attn_every:
+            logits, aux = model.forward(params, batch["tokens"],
+                                        cross_kv_x=batch["vision"])
+            labels = batch["labels"]
+        else:
+            logits, aux = model.forward(params, batch["tokens"])
+            labels = batch["labels"]
+        loss = softmax_xent(logits, labels)
+        return loss + cfg.router_aux_coef * aux, (loss, aux)
+
+    def train_step(params, opt_state, batch):
+        (tot, (loss, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        lr = cosine_schedule(opt_state.step, base_lr)
+        params, opt_state = adamw_update(params, grads, opt_state, lr)
+        return params, opt_state, {"loss": loss, "aux": aux, "lr": lr}
+
+    return train_step
+
+
+def init_train_state(model, key, keep_master: bool = True):
+    params = model.init_params(key)
+    return params, adamw_init(params, keep_master=keep_master)
+
+
+# --------------------------------------------------------------------------- #
+def make_serve_step(model, cfg: ModelConfig):
+    """One-token decode: (params, cache, token, pos) -> (next, cache)."""
+
+    def serve_step(params, cache, token, pos):
+        logits, cache = model.decode_step(params, cache, token, pos)
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    return serve_step
+
+
+def make_prefill_step(model, cfg: ModelConfig):
+    """Forward over the prompt; returns last-position logits (the dry-run
+    prefill cell lowers this; cache construction is exercised by the
+    serving example at small scale)."""
+
+    def prefill(params, batch):
+        if cfg.encoder_decoder:
+            logits, _ = model.forward(params, batch["frames"],
+                                      batch["targets"])
+        elif cfg.cross_attn_every:
+            logits, _ = model.forward(params, batch["tokens"],
+                                      cross_kv_x=batch["vision"])
+        else:
+            logits, _ = model.forward(params, batch["tokens"])
+        return logits[:, -1, :]
+
+    return prefill
+
+
+# --------------------------------------------------------------------------- #
+def input_specs(cfg: ModelConfig, cell: ShapeCell,
+                zeros: bool = False) -> Dict[str, Any]:
+    """ShapeDtypeStruct (or zero-array) stand-ins for every model input of
+    one (arch x shape) dry-run cell."""
+    mk = (lambda s, d: (jnp.zeros(s, d) if zeros
+                        else jax.ShapeDtypeStruct(s, d)))
+    b, t = cell.global_batch, cell.seq_len
+    dt = cfg.jdtype
+    if cell.kind in ("train", "prefill"):
+        if cfg.encoder_decoder:
+            tl = cfg.decoder_target_len
+            return {"frames": mk((b, t, cfg.d_model), dt),
+                    "targets": mk((b, tl), jnp.int32),
+                    "target_labels": mk((b, tl), jnp.int32)}
+        out = {"tokens": mk((b, t), jnp.int32),
+               "labels": mk((b, t), jnp.int32)}
+        if cfg.cross_attn_every:
+            out["vision"] = mk((b, cfg.n_vision_tokens, cfg.d_model), dt)
+        if cell.kind == "prefill":
+            out.pop("labels")
+        return out
+    # decode: one token + cache of seq_len
+    return {"token": mk((b, 1), jnp.int32),
+            "pos": mk((), jnp.int32)}

@@ -1,0 +1,386 @@
+"""Config-driven decoder LM covering every assigned architecture family.
+
+A model is a list of *segments*; each segment is a superblock of one or
+more BlockSpecs scanned ``repeat`` times (scan-over-layers keeps the HLO
+small and compile times flat in depth).  Heterogeneous layer patterns
+(gemma3's 5 local : 1 global, deepseek's first-k-dense, llama-vision's
+cross-attention every 5th layer, xLSTM's mLSTM/sLSTM alternation) become
+superblock structure.
+
+Public surface:
+  init_params / param_specs          — real weights or ShapeDtypeStructs
+  forward(params, tokens, ...)       — train/prefill logits
+  init_cache_specs / init_cache      — decode caches per shape cell
+  decode_step(params, cache, ...)    — one token with KV/state caches
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import mla as MLA
+from . import moe as MOE
+from . import ssm as SSM
+from . import xlstm_blocks as XL
+from .config import ModelConfig
+from .layers import Params, dense_init, rms_norm, swiglu, swiglu_init
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    attn: str = "gqa"        # gqa | mla | hymba | mlstm | slstm
+    ffn: str = "dense"       # dense | moe | none
+    window: int = 0          # sliding-window size (0 = full attention)
+    cross_attn: bool = False
+
+
+def build_segments(cfg: ModelConfig) -> List[Tuple[Tuple[BlockSpec, ...],
+                                                   int]]:
+    """Architecture pattern -> [(superblock, repeat)]."""
+    if cfg.xlstm:
+        pair = (BlockSpec(attn="mlstm", ffn="none"),
+                BlockSpec(attn="slstm", ffn="none"))
+        assert cfg.n_layers % 2 == 0
+        return [(pair, cfg.n_layers // 2)]
+    if cfg.ssm_heads:  # hymba: parallel attn+ssm heads every layer
+        return [((BlockSpec(attn="hymba", window=cfg.local_window),),
+                 cfg.n_layers)]
+    attn = "mla" if cfg.mla else "gqa"
+    ffn_main = "moe" if cfg.is_moe else "dense"
+    segs: List[Tuple[Tuple[BlockSpec, ...], int]] = []
+    if cfg.attn_pattern == "local_global":
+        r = cfg.local_global_ratio
+        sb = tuple([BlockSpec(attn=attn, ffn=ffn_main,
+                              window=cfg.local_window)] * (r - 1)
+                   + [BlockSpec(attn=attn, ffn=ffn_main)])
+        rem = cfg.n_layers % r
+        if rem:
+            segs.append(((BlockSpec(attn=attn, ffn=ffn_main,
+                                    window=cfg.local_window),), rem))
+        segs.append((sb, cfg.n_layers // r))
+        return segs
+    if cfg.is_moe and cfg.first_k_dense:
+        segs.append(((BlockSpec(attn=attn, ffn="dense"),),
+                     cfg.first_k_dense))
+        segs.append(((BlockSpec(attn=attn, ffn="moe"),),
+                     cfg.n_layers - cfg.first_k_dense))
+        return segs
+    if cfg.cross_attn_every:
+        k = cfg.cross_attn_every
+        assert cfg.n_layers % k == 0
+        sb = tuple([BlockSpec(attn=attn)] * (k - 1)
+                   + [BlockSpec(attn=attn, cross_attn=True)])
+        return [(sb, cfg.n_layers // k)]
+    return [((BlockSpec(attn=attn, ffn=ffn_main),), cfg.n_layers)]
+
+
+# --------------------------------------------------------------------------- #
+# Block init / apply
+# --------------------------------------------------------------------------- #
+def block_init(key, cfg: ModelConfig, spec: BlockSpec) -> Params:
+    dt = cfg.jdtype
+    d = cfg.d_model
+    keys = jax.random.split(key, 8)
+    p: Params = {}
+    if spec.attn in ("gqa", "hymba"):
+        p["ln1"] = jnp.zeros((d,), dt)
+        p["attn"] = A.attn_init(keys[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.hd, dt, qk_norm=cfg.qk_norm)
+        if spec.attn == "hymba":
+            p["ssm"] = SSM.ssm_init(keys[1], d, cfg.ssm_heads,
+                                    d // cfg.ssm_heads, cfg.ssm_state, dt)
+    elif spec.attn == "mla":
+        p["ln1"] = jnp.zeros((d,), dt)
+        p["attn"] = MLA.mla_init(keys[0], cfg, dt)
+    elif spec.attn == "mlstm":
+        p["ln1"] = jnp.zeros((d,), dt)
+        p["core"] = XL.mlstm_init(keys[0], d, cfg.n_heads, dt)
+    elif spec.attn == "slstm":
+        p["ln1"] = jnp.zeros((d,), dt)
+        p["core"] = XL.slstm_init(keys[0], d, cfg.n_heads, dt)
+    if spec.cross_attn:
+        p["ln_x"] = jnp.zeros((d,), dt)
+        p["xattn"] = A.attn_init(keys[2], d, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.hd, dt, kv_input_dim=d)
+    if spec.ffn == "dense":
+        p["ln2"] = jnp.zeros((d,), dt)
+        p["mlp"] = swiglu_init(keys[3], d, cfg.d_ff, dt)
+    elif spec.ffn == "moe":
+        p["ln2"] = jnp.zeros((d,), dt)
+        p["moe"] = MOE.moe_init(keys[3], d, cfg.d_ff_moe, cfg.n_experts,
+                                dt, n_shared=cfg.n_shared_experts)
+    return p
+
+
+def block_apply(cfg: ModelConfig, spec: BlockSpec, bp: Params,
+                x: jnp.ndarray, positions: jnp.ndarray,
+                ctx: Dict[str, Any]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence (train/prefill) application.  Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    eps = cfg.norm_eps
+    if spec.attn in ("gqa", "hymba"):
+        h = rms_norm(x, bp["ln1"], eps)
+        a = A.attention(bp["attn"], h, positions, window=spec.window,
+                        rope_theta=cfg.rope_theta, eps=eps,
+                        chunk=cfg.attn_chunk)
+        if spec.attn == "hymba":
+            scan_fn = (SSM.ssm_scan_ssd if cfg.ssm_impl == "ssd"
+                       else SSM.ssm_scan)
+            s = scan_fn(bp["ssm"], h, cfg.ssm_state)
+            a = 0.5 * (a + s)
+        x = x + a
+    elif spec.attn == "mla":
+        h = rms_norm(x, bp["ln1"], eps)
+        x = x + MLA.mla_attention(bp["attn"], cfg, h, positions,
+                                  chunk=cfg.attn_chunk)
+    elif spec.attn == "mlstm":
+        x = x + XL.mlstm_scan(bp["core"], rms_norm(x, bp["ln1"], eps))
+    elif spec.attn == "slstm":
+        x = x + XL.slstm_scan(bp["core"], rms_norm(x, bp["ln1"], eps))
+    if spec.cross_attn:
+        h = rms_norm(x, bp["ln_x"], eps)
+        x = x + A.attention(bp["xattn"], h, positions,
+                            kv_x=ctx["cross_kv_x"], causal=False,
+                            use_rope=False, eps=eps)
+    if spec.ffn == "dense":
+        x = x + swiglu(bp["mlp"], rms_norm(x, bp["ln2"], eps))
+    elif spec.ffn == "moe":
+        h = rms_norm(x, bp["ln2"], eps)
+        if ctx.get("moe_impl", "dense") == "a2a":
+            y, aux = MOE.moe_a2a(bp["moe"], h, cfg.top_k,
+                                 cfg.capacity_factor, ctx["mesh"])
+        else:
+            y, aux = MOE.moe_dense(bp["moe"], h, cfg.top_k)
+        x = x + y
+    return x, aux
+
+
+# --------------------------------------------------------------------------- #
+def block_cache_init(cfg: ModelConfig, spec: BlockSpec, batch: int,
+                     seq_len: int, zeros: bool = True,
+                     cross_len: Optional[int] = None):
+    """Decode cache for one block (ShapeDtypeStructs when zeros=False)."""
+    dt = cfg.jdtype
+    cross_len = cross_len or cfg.n_vision_tokens
+    mk = (jnp.zeros if zeros
+          else (lambda s, d: jax.ShapeDtypeStruct(s, d)))
+    c: Dict[str, Any] = {}
+    if spec.attn in ("gqa", "hymba"):
+        s = min(spec.window, seq_len) if spec.window else seq_len
+        c["k"] = mk((batch, s, cfg.n_kv_heads, cfg.hd), dt)
+        c["v"] = mk((batch, s, cfg.n_kv_heads, cfg.hd), dt)
+        if spec.attn == "hymba":
+            c["ssm"] = mk((batch, cfg.ssm_heads,
+                           cfg.d_model // cfg.ssm_heads, cfg.ssm_state),
+                          jnp.float32)
+    elif spec.attn == "mla":
+        c["c"] = mk((batch, seq_len, cfg.kv_lora), dt)
+        c["k_rope"] = mk((batch, seq_len, cfg.qk_rope), dt)
+    # xLSTM stabilizer state 'm' must start at -inf (log-space max).
+    mk_m = ((lambda s, d: jnp.full(s, -1e30, d)) if zeros
+            else (lambda s, d: jax.ShapeDtypeStruct(s, d)))
+    if spec.attn == "mlstm":
+        dh = int(cfg.d_model * 2.0) // cfg.n_heads
+        c["C"] = mk((batch, cfg.n_heads, dh, dh), jnp.float32)
+        c["n"] = mk((batch, cfg.n_heads, dh), jnp.float32)
+        c["m"] = mk_m((batch, cfg.n_heads), jnp.float32)
+    elif spec.attn == "slstm":
+        dh = cfg.d_model // cfg.n_heads
+        for k in ("c", "n", "h"):
+            c[k] = mk((batch, cfg.n_heads, dh), jnp.float32)
+        c["m"] = mk_m((batch, cfg.n_heads), jnp.float32)
+    if spec.cross_attn:
+        c["xk"] = mk((batch, cross_len, cfg.n_kv_heads, cfg.hd), dt)
+        c["xv"] = mk((batch, cross_len, cfg.n_kv_heads, cfg.hd), dt)
+    return c
+
+
+def block_decode(cfg: ModelConfig, spec: BlockSpec, bp: Params,
+                 x: jnp.ndarray, cache, pos,
+                 ctx: Optional[Dict[str, Any]] = None
+                 ) -> Tuple[jnp.ndarray, Any]:
+    ctx = ctx or {}
+    eps = cfg.norm_eps
+    if spec.attn in ("gqa", "hymba"):
+        h = rms_norm(x, bp["ln1"], eps)
+        kv = {"k": cache["k"], "v": cache["v"]}
+        a, kv = A.decode_attention(bp["attn"], h, kv, pos,
+                                   window=spec.window,
+                                   rope_theta=cfg.rope_theta, eps=eps)
+        cache = dict(cache, **kv)
+        if spec.attn == "hymba":
+            s, st = SSM.ssm_decode_step(bp["ssm"], h, cache["ssm"],
+                                        cfg.ssm_state)
+            cache = dict(cache, ssm=st)
+            a = 0.5 * (a + s)
+        x = x + a
+    elif spec.attn == "mla":
+        h = rms_norm(x, bp["ln1"], eps)
+        a, mc = MLA.mla_decode_step(
+            bp["attn"], cfg, h, {"c": cache["c"],
+                                 "k_rope": cache["k_rope"]}, pos)
+        cache = dict(cache, **mc)
+        x = x + a
+    elif spec.attn == "mlstm":
+        a, st = XL.mlstm_decode_step(bp["core"],
+                                     rms_norm(x, bp["ln1"], eps),
+                                     {k: cache[k] for k in ("C", "n", "m")})
+        cache = dict(cache, **st)
+        x = x + a
+    elif spec.attn == "slstm":
+        a, st = XL.slstm_decode_step(
+            bp["core"], rms_norm(x, bp["ln1"], eps),
+            {k: cache[k] for k in ("c", "n", "h", "m")})
+        cache = dict(cache, **st)
+        x = x + a
+    if spec.cross_attn:
+        h = rms_norm(x, bp["ln_x"], eps)
+        a, _ = A.decode_attention(bp["xattn"], h,
+                                  {"k": cache["xk"], "v": cache["xv"]},
+                                  pos, cross=True, eps=eps)
+        x = x + a
+    if spec.ffn == "dense":
+        x = x + swiglu(bp["mlp"], rms_norm(x, bp["ln2"], eps))
+    elif spec.ffn == "moe":
+        h = rms_norm(x, bp["ln2"], eps)
+        if ctx.get("moe_impl", "dense") == "a2a":
+            # decode (t==1): tokens are replicated over the expert axis —
+            # use the a2a-free local-experts path (see moe.moe_local)
+            y, _ = MOE.moe_local(bp["moe"], h, cfg.top_k,
+                                 cfg.capacity_factor, ctx["mesh"])
+        else:
+            y, _ = MOE.moe_dense(bp["moe"], h, cfg.top_k)
+        x = x + y
+    return x, cache
+
+
+# --------------------------------------------------------------------------- #
+class DecoderLM:
+    def __init__(self, cfg: ModelConfig, moe_impl: str = "dense",
+                 mesh=None) -> None:
+        self.cfg = cfg
+        self.segments = build_segments(cfg)
+        self.moe_impl = moe_impl
+        self.mesh = mesh
+
+    # -- params -------------------------------------------------------- #
+    def init_params(self, key) -> Params:
+        cfg = self.cfg
+        dt = cfg.jdtype
+        k_embed, k_head, *seg_keys = jax.random.split(
+            key, 2 + len(self.segments))
+        params: Params = {
+            "embed": dense_init(k_embed, cfg.vocab, cfg.d_model, dt,
+                                std=0.02),
+            "final_norm": jnp.zeros((cfg.d_model,), dt),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = dense_init(k_head, cfg.d_model, cfg.vocab, dt)
+        segs = []
+        for (sb, rep), sk in zip(self.segments, seg_keys):
+            keys = jax.random.split(sk, rep)
+            blocks = []
+            for pos_i, spec in enumerate(sb):
+                init_one = lambda kk, s=spec: block_init(
+                    jax.random.fold_in(kk, pos_i), self.cfg, s)
+                blocks.append(jax.vmap(init_one)(keys))
+            segs.append(tuple(blocks))
+        params["segments"] = segs
+        return params
+
+    def param_specs(self) -> Any:
+        """ShapeDtypeStruct pytree (no allocation) for dry-run lowering."""
+        return jax.eval_shape(
+            lambda: self.init_params(jax.random.PRNGKey(0)))
+
+    # -- forward (train / prefill) -------------------------------------- #
+    def forward(self, params: Params, tokens: jnp.ndarray,
+                cross_kv_x: Optional[jnp.ndarray] = None,
+                positions: Optional[jnp.ndarray] = None) -> Tuple[
+                    jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+        b, t = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0)
+        positions = (jnp.arange(t, dtype=jnp.int32)
+                     if positions is None else positions)
+        ctx = {"moe_impl": self.moe_impl, "mesh": self.mesh,
+               "cross_kv_x": cross_kv_x}
+        aux_total = jnp.zeros((), jnp.float32)
+
+        for (sb, rep), seg_params in zip(self.segments, params["segments"]):
+            def body(carry, layer_params):
+                xx, aux = carry
+                for spec, bp in zip(sb, layer_params):
+                    xx, a = block_apply(cfg, spec, bp, xx, positions, ctx)
+                    aux = aux + a
+                return (xx, aux), None
+
+            body = _remat(body, cfg.remat)
+            (x, aux_total), _ = jax.lax.scan(
+                body, (x, aux_total), tuple(seg_params))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._logits(params, x)
+        return logits, aux_total
+
+    def _logits(self, params, x):
+        if self.cfg.tie_embeddings:
+            return jnp.einsum("btd,vd->btv", x, params["embed"])
+        return jnp.einsum("btd,dv->btv", x, params["head"])
+
+    # -- decode --------------------------------------------------------- #
+    def init_cache(self, batch: int, seq_len: int, zeros: bool = True,
+                   cross_len: Optional[int] = None):
+        caches = []
+        for (sb, rep) in self.segments:
+            blocks = []
+            for spec in sb:
+                one = block_cache_init(self.cfg, spec, batch, seq_len,
+                                       zeros=zeros, cross_len=cross_len)
+                if zeros:
+                    stacked = jax.tree.map(
+                        lambda a: jnp.broadcast_to(a, (rep,) + a.shape),
+                        one)
+                else:
+                    stacked = jax.tree.map(
+                        lambda s: jax.ShapeDtypeStruct(
+                            (rep,) + s.shape, s.dtype), one)
+                blocks.append(stacked)
+            caches.append(tuple(blocks))
+        return caches
+
+    def decode_step(self, params: Params, cache, token: jnp.ndarray,
+                    pos: jnp.ndarray) -> Tuple[jnp.ndarray, Any]:
+        """token [B,1] int32; pos scalar int32.  Returns (logits, cache)."""
+        cfg = self.cfg
+        ctx = {"moe_impl": self.moe_impl, "mesh": self.mesh}
+        x = jnp.take(params["embed"], token, axis=0)
+        new_caches = []
+        for (sb, rep), seg_params, seg_cache in zip(
+                self.segments, params["segments"], cache):
+            def body(xx, scanned):
+                layer_params, layer_cache = scanned
+                new_lc = []
+                for spec, bp, lc in zip(sb, layer_params, layer_cache):
+                    xx, lc2 = block_decode(cfg, spec, bp, xx, lc, pos, ctx)
+                    new_lc.append(lc2)
+                return xx, tuple(new_lc)
+
+            x, new_c = jax.lax.scan(body, x, (tuple(seg_params),
+                                              tuple(seg_cache)))
+            new_caches.append(new_c)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return self._logits(params, x), new_caches
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)  # "full": save nothing

@@ -1,0 +1,221 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, fully
+parallelizable via associative scan) and sLSTM (scalar memory with a true
+recurrence, executed with lax.scan).
+
+mLSTM per head (d_h = head dim):
+  C_t = f_t C_{t-1} + i_t v_t k_t^T          (C in R^{d_h x d_h})
+  n_t = f_t n_{t-1} + i_t k_t
+  y_t = (C_t q_t) / max(|n_t . q_t|, 1)
+with exp input gate / sigmoid forget gate in log space for stability
+(we use the stabilized formulation with a running max m_t folded into the
+associative scan elements).
+
+sLSTM per head: scalar cell c_t, normalizer n_t, recurrent connection on
+the hidden state (block-diagonal per head).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense_init
+
+
+# --------------------------------------------------------------------------- #
+# mLSTM
+# --------------------------------------------------------------------------- #
+def mlstm_init(key, d: int, n_heads: int, dtype, pf: float = 2.0) -> Params:
+    ku, kq, kk, kv, ki, kf, ko, kd = jax.random.split(key, 8)
+    dh = int(d * pf) // n_heads
+    du = dh * n_heads
+    return {
+        "w_up": dense_init(ku, d, du, dtype),
+        "w_q": dense_init(kq, du, (n_heads, dh), dtype),
+        "w_k": dense_init(kk, du, (n_heads, dh), dtype),
+        "w_v": dense_init(kv, du, (n_heads, dh), dtype),
+        "w_i": dense_init(ki, du, n_heads, jnp.float32, std=0.02),
+        "w_f": dense_init(kf, du, n_heads, jnp.float32, std=0.02),
+        "f_bias": jnp.ones((n_heads,), jnp.float32) * 3.0,
+        "w_down": dense_init(kd, du, d, dtype),
+    }
+
+
+def _mlstm_gates(p, x):
+    u = jnp.einsum("btd,df->btf", x, p["w_up"])
+    q = jnp.einsum("btf,fhe->bthe", u, p["w_q"])
+    k = jnp.einsum("btf,fhe->bthe", u, p["w_k"])
+    v = jnp.einsum("btf,fhe->bthe", u, p["w_v"])
+    logi = jnp.einsum("btf,fh->bth", u, p["w_i"]).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(
+        jnp.einsum("btf,fh->bth", u, p["w_f"]).astype(jnp.float32)
+        + p["f_bias"])
+    return u, q, k, v, logi, logf
+
+
+def mlstm_scan(p: Params, x: jnp.ndarray, chunk: int = 256) -> jnp.ndarray:
+    """Full-sequence mLSTM via the stabilized *quadratic* parallel form.
+
+    Materializing C_t (matrix memory) per step costs O(T * dh^2) memory;
+    the quadratic form computes y_t = sum_j D[t,j] (q_t.k_j) v_j with
+    D[t,j] = exp(logi_j + F_t - F_j - m_t), F = cumsum(logf) — identical
+    math (contribution of step j decayed through t), attention-like
+    memory, chunked over queries.  x [B,T,D] -> y [B,T,D]."""
+    u, q, k, v, logi, logf = _mlstm_gates(p, x)
+    b, t, h, dh = q.shape
+    F = jnp.cumsum(logf, axis=1)                           # [B,T,H]
+
+    # stabilizer m_t = max_j (logi_j + F_t - F_j), via associative scan
+    def mcomb(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 + a2, jnp.maximum(b1 + a2, b2)
+    _, m = jax.lax.associative_scan(mcomb, (logf, logi), axis=1)
+
+    a = (logi - F).astype(jnp.float32)                     # [B,T,H] (keys)
+    kf = k.astype(jnp.float32) * (dh ** -0.5)
+    vf = v.astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    jpos = jnp.arange(t, dtype=jnp.int32)
+
+    def one_chunk(args):
+        qc, Fc, mc, pc = args   # [B,c,H,dh], [B,c,H], [B,c,H], [c]
+        logD = (a[:, None] + Fc[:, :, None] - mc[:, :, None])  # [B,c,T,H]
+        mask = pc[:, None] >= jpos[None, :]
+        D = jnp.where(mask[None, :, :, None], jnp.exp(logD), 0.0)
+        s = jnp.einsum("bqhe,bkhe->bqkh", qc, kf) * D
+        num = jnp.einsum("bqkh,bkhe->bqhe", s, vf)
+        den = jnp.maximum(jnp.abs(jnp.sum(s, axis=2)), 1.0)  # [B,c,H]
+        return num / den[..., None]
+
+    if chunk and t > chunk and t % chunk == 0:
+        nc = t // chunk
+        args = (qf.reshape(b, nc, chunk, h, dh).swapaxes(0, 1),
+                F.reshape(b, nc, chunk, h).swapaxes(0, 1),
+                m.reshape(b, nc, chunk, h).swapaxes(0, 1),
+                jpos.reshape(nc, chunk))
+        y = jax.lax.map(one_chunk, args)
+        y = y.swapaxes(0, 1).reshape(b, t, h, dh)
+    else:
+        y = one_chunk((qf, F, m, jpos))
+    y = y.astype(x.dtype).reshape(b, t, h * dh)
+    y = y * jax.nn.silu(u.astype(jnp.float32)).astype(y.dtype)
+    return jnp.einsum("btf,fd->btd", y, p["w_down"])
+
+
+def mlstm_decode_init(batch: int, n_heads: int, dh: int) -> Dict:
+    return {
+        "C": jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, dh), jnp.float32),
+        "m": jnp.full((batch, n_heads), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode_step(p: Params, x: jnp.ndarray, st: Dict
+                      ) -> Tuple[jnp.ndarray, Dict]:
+    u, q, k, v, logi, logf = _mlstm_gates(p, x)
+    dh = q.shape[-1]
+    logi, logf = logi[:, 0], logf[:, 0]
+    m_new = jnp.maximum(logf + st["m"], logi)
+    f_ = jnp.exp(logf + st["m"] - m_new)
+    i_ = jnp.exp(logi - m_new)
+    kf = k[:, 0].astype(jnp.float32) * (dh ** -0.5)
+    vf = v[:, 0].astype(jnp.float32)
+    C = st["C"] * f_[..., None, None] \
+        + i_[..., None, None] * jnp.einsum("bhe,bhf->bhef", vf, kf)
+    n = st["n"] * f_[..., None] + i_[..., None] * kf
+    qf = q[:, 0].astype(jnp.float32)
+    num = jnp.einsum("bhef,bhf->bhe", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhe,bhe->bh", n, qf)), 1.0)
+    y = (num / den[..., None]).astype(x.dtype)
+    b, h, _ = y.shape
+    y = y.reshape(b, 1, h * dh)
+    y = y * jax.nn.silu(u.astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("btf,fd->btd", y, p["w_down"])
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# --------------------------------------------------------------------------- #
+# sLSTM
+# --------------------------------------------------------------------------- #
+def slstm_init(key, d: int, n_heads: int, dtype, pf: float = 4 / 3) -> Params:
+    kz, ki, kf, ko, kr, ku, kd = jax.random.split(key, 7)
+    dh = d // n_heads
+    return {
+        "w_z": dense_init(kz, d, (n_heads, dh), dtype),
+        "w_i": dense_init(ki, d, n_heads, jnp.float32, std=0.02),
+        "w_f": dense_init(kf, d, n_heads, jnp.float32, std=0.02),
+        "w_o": dense_init(ko, d, (n_heads, dh), dtype),
+        "r_z": dense_init(kr, dh, (n_heads, dh), jnp.float32, std=0.02),
+        "f_bias": jnp.ones((n_heads,), jnp.float32) * 3.0,
+        "w_up": dense_init(ku, d, int(d * pf), dtype),
+        "w_down": dense_init(kd, int(d * pf), d, dtype),
+    }
+
+
+def slstm_scan(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Sequential sLSTM (true recurrence on h).  x [B,T,D]."""
+    b, t, d = x.shape
+    h_heads = p["w_i"].shape[-1]
+    dh = d // h_heads
+
+    z_in = jnp.einsum("btd,dhe->bthe", x, p["w_z"]).astype(jnp.float32)
+    i_in = jnp.einsum("btd,dh->bth", x, p["w_i"]).astype(jnp.float32)
+    f_in = jnp.einsum("btd,dh->bth", x, p["w_f"]).astype(jnp.float32)
+    o_in = jnp.einsum("btd,dhe->bthe", x, p["w_o"]).astype(jnp.float32)
+
+    def step(carry, inp):
+        c, n, hprev, m = carry
+        z_t, i_t, f_t, o_t = inp
+        z_t = z_t + jnp.einsum("bhe,ehf->bhf", hprev, p["r_z"])
+        logf = jax.nn.log_sigmoid(f_t + p["f_bias"])
+        m_new = jnp.maximum(logf + m, i_t)
+        fs = jnp.exp(logf + m - m_new)
+        is_ = jnp.exp(i_t - m_new)
+        c = fs[..., None] * c + is_[..., None] * jnp.tanh(z_t)
+        n = fs[..., None] * n + is_[..., None]
+        hcur = jax.nn.sigmoid(o_t) * c / jnp.maximum(n, 1.0)
+        return (c, n, hcur, m_new), hcur
+
+    init = (jnp.zeros((b, h_heads, dh), jnp.float32),
+            jnp.zeros((b, h_heads, dh), jnp.float32),
+            jnp.zeros((b, h_heads, dh), jnp.float32),
+            jnp.full((b, h_heads), -1e30, jnp.float32))
+    xs = (z_in.swapaxes(0, 1), i_in.swapaxes(0, 1), f_in.swapaxes(0, 1),
+          o_in.swapaxes(0, 1))
+    _, hs = jax.lax.scan(step, init, xs)
+    y = hs.swapaxes(0, 1).reshape(b, t, d).astype(x.dtype)
+    u = jnp.einsum("btd,df->btf", y, p["w_up"])
+    u = jax.nn.gelu(u.astype(jnp.float32)).astype(u.dtype)
+    return jnp.einsum("btf,fd->btd", u, p["w_down"])
+
+
+def slstm_decode_init(batch: int, n_heads: int, dh: int) -> Dict:
+    z = jnp.zeros((batch, n_heads, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z,
+            "m": jnp.full((batch, n_heads), -1e30, jnp.float32)}
+
+
+def slstm_decode_step(p: Params, x: jnp.ndarray, st: Dict
+                      ) -> Tuple[jnp.ndarray, Dict]:
+    b, _, d = x.shape
+    h_heads = p["w_i"].shape[-1]
+    dh = d // h_heads
+    z_t = jnp.einsum("btd,dhe->bhe", x, p["w_z"]).astype(jnp.float32)
+    i_t = jnp.einsum("btd,dh->bh", x, p["w_i"]).astype(jnp.float32)
+    f_t = jnp.einsum("btd,dh->bh", x, p["w_f"]).astype(jnp.float32)
+    o_t = jnp.einsum("btd,dhe->bhe", x, p["w_o"]).astype(jnp.float32)
+    z_t = z_t + jnp.einsum("bhe,ehf->bhf", st["h"], p["r_z"])
+    logf = jax.nn.log_sigmoid(f_t + p["f_bias"])
+    m_new = jnp.maximum(logf + st["m"], i_t)
+    fs = jnp.exp(logf + st["m"] - m_new)
+    is_ = jnp.exp(i_t - m_new)
+    c = fs[..., None] * st["c"] + is_[..., None] * jnp.tanh(z_t)
+    n = fs[..., None] * st["n"] + is_[..., None]
+    hcur = jax.nn.sigmoid(o_t) * c / jnp.maximum(n, 1.0)
+    y = hcur.reshape(b, 1, d).astype(x.dtype)
+    u = jnp.einsum("btd,df->btf", y, p["w_up"])
+    u = jax.nn.gelu(u.astype(jnp.float32)).astype(u.dtype)
+    out = jnp.einsum("btf,fd->btd", u, p["w_down"])
+    return out, {"c": c, "n": n, "h": hcur, "m": m_new}

@@ -1,0 +1,66 @@
+"""AdamW, built in-house (offline container: no optax).
+
+State: first/second moments in f32 + optional f32 master params when the
+model runs bf16.  ZeRO-1 sharding of this state is a *sharding spec*
+decision (distributed/zero.py), not an algorithm change.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+    master: Optional[Any]     # f32 copy of params (None if params are f32)
+
+
+def adamw_init(params, keep_master: bool = True) -> AdamWState:
+    f32 = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    mu = jax.tree.map(f32, params)
+    nu = jax.tree.map(f32, params)
+    master = None
+    if keep_master:
+        # explicit copy: a no-op astype would alias the param buffer and
+        # break double-donation in jitted train steps
+        master = jax.tree.map(
+            lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params)
+    return AdamWState(jnp.zeros((), jnp.int32), mu, nu, master)
+
+
+def adamw_update(params, grads, state: AdamWState, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, grad_clip: float = 1.0):
+    """Returns (new_params, new_state).  Global-norm clipping, decoupled
+    weight decay, bias correction; f32 math throughout."""
+    gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if grad_clip > 0:
+        gn = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(gf)))
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gn, 1e-9))
+        gf = jax.tree.map(lambda g: g * scale, gf)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, gf)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, gf)
+    ref = state.master if state.master is not None else params
+
+    def upd(p, m, v):
+        return (p - lr * (m / c1 / (jnp.sqrt(v / c2) + eps)
+                          + weight_decay * p))
+
+    new_ref = jax.tree.map(upd, jax.tree.map(
+        lambda p: p.astype(jnp.float32), ref), mu, nu)
+    if state.master is not None:
+        new_params = jax.tree.map(
+            lambda r, p: r.astype(p.dtype), new_ref, params)
+        return new_params, AdamWState(step, mu, nu, new_ref)
+    new_params = jax.tree.map(
+        lambda r, p: r.astype(p.dtype), new_ref, params)
+    return new_params, AdamWState(step, mu, nu, None)

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# NOTE: do NOT set XLA_FLAGS host-device-count here — smoke tests and
+# benches must see 1 device (the dry-run sets 512 in its own process).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

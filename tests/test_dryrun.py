@@ -1,0 +1,67 @@
+"""Dry-run plumbing integration test: one real cell on the production
+512-device multi-pod mesh, in a subprocess (the main test process stays
+single-device)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+def test_run_cell_whisper_decode(mesh):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["DRYRUN_SAVE_HLO"] = "0"
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=512"
+        from repro.launch.dryrun import run_cell
+        rec = run_cell("whisper-base", "decode_32k", {mesh!r})
+        assert rec["memory"]["per_device_total"] > 0
+        assert rec["analysis"]["flops_per_device"] > 0
+        assert rec["roofline"]["dominant"] in (
+            "compute_s", "memory_s", "collective_s")
+        assert rec["n_devices"] == (512 if {mesh!r} == "multi" else 256)
+        print("OK", rec["roofline"]["dominant"])
+    """)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=580)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout
+
+
+def test_cell_skip_rules():
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.launch.dryrun import LONG_OK, cell_supported
+    # sub-quadratic-capable archs run long_500k; pure full-attention skip
+    assert cell_supported("gemma3-12b", "long_500k") is None
+    assert cell_supported("hymba-1.5b", "long_500k") is None
+    assert cell_supported("granite-8b", "long_500k") is not None
+    assert cell_supported("deepseek-v3-671b", "long_500k") is not None
+    for arch in LONG_OK:
+        assert cell_supported(arch, "train_4k") is None
+
+
+def test_sweep_artifacts_complete():
+    """The committed sweep must cover all 10 archs x 4 shapes x 2 meshes
+    (40 cells/mesh: 34 runnable + 6 recorded skips)."""
+    art = os.path.join(REPO, "artifacts", "dryrun")
+    if not os.path.isdir(art):
+        pytest.skip("sweep artifacts not present")
+    recs = []
+    for f in os.listdir(art):
+        if f.endswith(".json") and "__naive" not in f and \
+                f.count("__") == 2:
+            recs.append(json.load(open(os.path.join(art, f))))
+    assert len(recs) == 80, len(recs)
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("skipped")]
+    assert len(ok) == 68, len(ok)
+    assert len(skipped) == 12
+    assert not [r for r in recs if r.get("status") == "error"]

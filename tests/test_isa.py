@@ -1,0 +1,61 @@
+"""128-bit ISA encode/decode roundtrip + binary format (paper §5.3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import gnn_builders as B
+from repro.core import graph as G
+from repro.core.compiler import CompileOptions, compile_model
+from repro.core.isa import (Buf, Instr, Opcode, Region, assemble,
+                            disassemble)
+from repro.core.passes.partition import PartitionConfig
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    op=st.sampled_from(list(Opcode)),
+    pe=st.integers(0, 255),
+    act=st.integers(0, 63),
+    act_en=st.booleans(),
+    on_edges=st.booleans(),
+    flags=st.integers(0, 255),
+    args=st.tuples(*[st.integers(0, 0xFFFF)] * 4),
+    arg4=st.integers(0, 0xFFFFFFFF),
+)
+def test_instr_roundtrip(op, pe, act, act_en, on_edges, flags, args, arg4):
+    i = Instr(op=op, pe=pe, act=act, act_en=act_en, on_edges=on_edges,
+              flags=flags, args=args, arg4=arg4)
+    j = Instr.decode(i.encode())
+    assert j == i
+
+
+def test_instruction_is_128_bits():
+    assert Instr(Opcode.GEMM).encode().nbytes == 16
+
+
+def test_assemble_roundtrip_and_size():
+    instrs = [Instr(Opcode.CSI, args=(1, 0, 8, 8), arg4=4),
+              Instr(Opcode.GEMM, pe=3, args=(64, 16, 16, 0)),
+              Instr(Opcode.HALT)]
+    blob = assemble(instrs)
+    assert len(blob) == 16 + 16 * len(instrs)
+    back = disassemble(blob)
+    assert back == instrs
+
+
+def test_compiled_binary_is_wellformed():
+    g = G.random_graph(1000, 5000, seed=0).gcn_normalized()
+    g.feat_dim, g.n_classes = 64, 3
+    m = B.build("b2", g)
+    cr = compile_model(m, g, CompileOptions(
+        partition=PartitionConfig(n1=256, n2=32)))
+    instrs = disassemble(cr.binary)
+    assert instrs[0].op == Opcode.CSI
+    assert instrs[-1].op == Opcode.HALT
+    # every layer contributes exactly one CSI
+    csis = [i for i in instrs if i.op == Opcode.CSI]
+    assert len(csis) == cr.program.model.num_layers
+    # binary size is tiny relative to the graph (paper Table 8 point)
+    graph_bytes = g.n_edges * 12 + g.n_vertices * g.feat_dim * 4
+    assert len(cr.binary) < graph_bytes

@@ -1,0 +1,130 @@
+"""Per-kernel Pallas (interpret=True) vs pure-jnp oracle sweeps:
+shapes x dtypes, plus property tests on ELL invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _arr(shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray((RNG.normal(0, 1, shape) * scale).astype(dtype))
+
+
+GEMM_SHAPES = [(128, 128, 128), (256, 128, 384), (64, 32, 16),
+               (100, 60, 33), (8, 8, 8), (1, 128, 1), (130, 70, 258)]
+
+
+@pytest.mark.parametrize("m,k,n", GEMM_SHAPES)
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_gemm_sweep(m, k, n, dtype):
+    x, w = _arr((m, k), dtype), _arr((k, n), dtype)
+    got = ops.gemm(x, w, interpret=True)
+    want = ref.gemm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2 if dtype != np.float32 else 1e-5,
+                               atol=1e-2 if dtype != np.float32 else 1e-4)
+
+
+SPDMM_SHAPES = [(128, 16, 128, 128), (64, 8, 128, 32), (100, 24, 70, 33),
+                (32, 64, 32, 8), (8, 8, 8, 8)]
+
+
+@pytest.mark.parametrize("n1,w,ns,f", SPDMM_SHAPES)
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_spdmm_sweep(n1, w, ns, f, dtype):
+    cols = jnp.asarray(RNG.integers(0, ns, (n1, w)).astype(np.int32))
+    vals = _arr((n1, w), np.float32) * (RNG.random((n1, w)) > 0.4)
+    vals = jnp.asarray(np.asarray(vals, np.float32))
+    h = _arr((ns, f), dtype)
+    got = ops.spdmm(cols, vals, h, interpret=True)
+    want = ref.spdmm_ref(cols, vals, h)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2 if dtype != np.float32 else 1e-5,
+                               atol=1e-2 if dtype != np.float32 else 1e-4)
+
+
+SDDMM_SHAPES = [(128, 16, 128, 128), (64, 8, 96, 256), (56, 24, 70, 33),
+                (8, 8, 8, 8)]
+
+
+@pytest.mark.parametrize("n1,w,ns,f", SDDMM_SHAPES)
+def test_sddmm_sweep(n1, w, ns, f):
+    cols = jnp.asarray(RNG.integers(0, ns, (n1, w)).astype(np.int32))
+    hd, hs = _arr((n1, f)), _arr((ns, f))
+    got = ops.sddmm(hd, hs, cols, interpret=True)
+    want = ref.sddmm_ref(hd, hs, cols)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n1=st.integers(1, 64), w=st.integers(1, 32), ns=st.integers(1, 64),
+       f=st.integers(1, 64), seed=st.integers(0, 9))
+def test_spdmm_property(n1, w, ns, f, seed):
+    r = np.random.default_rng(seed)
+    cols = jnp.asarray(r.integers(0, ns, (n1, w)).astype(np.int32))
+    vals = jnp.asarray(r.normal(0, 1, (n1, w)).astype(np.float32))
+    h = jnp.asarray(r.normal(0, 1, (ns, f)).astype(np.float32))
+    got = ops.spdmm(cols, vals, h, interpret=True)
+    want = ref.spdmm_ref(cols, vals, h)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_zero_padding_is_inert():
+    """ELL zero-pad entries (val==0) contribute exactly nothing."""
+    cols = jnp.asarray(np.zeros((16, 8), np.int32))
+    vals = jnp.asarray(np.zeros((16, 8), np.float32))
+    h = _arr((16, 16))
+    got = ops.spdmm(cols, vals, h, interpret=True)
+    assert float(jnp.max(jnp.abs(got))) == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# flash attention kernel
+# --------------------------------------------------------------------------- #
+FLASH_SHAPES = [(128, 128, 2, 64, True), (256, 256, 4, 32, True),
+                (128, 256, 1, 64, False), (256, 128, 2, 128, True)]
+
+
+@pytest.mark.parametrize("tq,tk,h,d,causal", FLASH_SHAPES)
+def test_flash_attention_sweep(tq, tk, h, d, causal):
+    from repro.kernels.flash_attention import flash_attention
+    r = np.random.default_rng(7)
+    q = jnp.asarray(r.normal(0, 1, (h, tq, d)).astype(np.float32))
+    k = jnp.asarray(r.normal(0, 1, (h, tk, d)).astype(np.float32))
+    v = jnp.asarray(r.normal(0, 1, (h, tk, d)).astype(np.float32))
+    got = flash_attention(q, k, v, bq=64, bk=64, causal=causal,
+                          interpret=True)
+    s = jnp.einsum("hqd,hkd->hqk", q, k) * (d ** -0.5)
+    if causal:
+        qpos = np.arange(tq)[:, None]
+        kpos = np.arange(tk)[None, :]
+        s = jnp.where(jnp.asarray(qpos >= kpos)[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    want = jnp.einsum("hqk,hkd->hqd", p, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    from repro.kernels.flash_attention import flash_attention
+    r = np.random.default_rng(8)
+    q = jnp.asarray(r.normal(0, 1, (2, 128, 64))).astype(jnp.bfloat16)
+    k = jnp.asarray(r.normal(0, 1, (2, 128, 64))).astype(jnp.bfloat16)
+    v = jnp.asarray(r.normal(0, 1, (2, 128, 64))).astype(jnp.bfloat16)
+    got = flash_attention(q, k, v, bq=64, bk=64, interpret=True)
+    from repro.kernels.ref import flash_attention_ref
+    want = flash_attention_ref(q.swapaxes(0, 1), k.swapaxes(0, 1),
+                               v.swapaxes(0, 1)).swapaxes(0, 1)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=3e-2, rtol=3e-2)

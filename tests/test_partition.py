@@ -1,0 +1,93 @@
+"""Fiber-shard partitioning invariants (paper §6.5), property-based."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import graph as G
+from repro.core.passes.partition import (PartitionConfig, choose_partition,
+                                         partition_graph)
+
+
+def _edges_from_tiles(pg):
+    n1 = pg.config.n1
+    out = []
+    for (j, k), ts in pg.tiles.items():
+        for t in ts:
+            r, c = np.nonzero(t.edge_pos >= 0)
+            src = k * n1 + t.cols[r, c]
+            dst = j * n1 + r
+            out.append(np.stack([src, dst, t.vals[r, c],
+                                 t.edge_pos[r, c]], axis=1))
+    if not out:
+        return np.zeros((0, 4))
+    return np.concatenate(out, axis=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nv=st.integers(10, 300),
+    ne=st.integers(1, 900),
+    n1=st.sampled_from([8, 16, 64]),
+    cap=st.sampled_from([8, 16, 512]),
+    degree=st.sampled_from(["uniform", "powerlaw"]),
+    seed=st.integers(0, 3),
+)
+def test_partition_covers_every_edge_exactly_once(nv, ne, n1, cap, degree,
+                                                  seed):
+    g = G.random_graph(nv, ne, seed=seed, degree=degree)
+    g.weight = np.random.default_rng(seed).normal(
+        0, 1, g.n_edges).astype(np.float32)
+    cfg = PartitionConfig(n1=n1, n2=8, width_cap=cap)
+    pg = partition_graph(g, cfg)
+    assert pg.total_nnz() == g.n_edges
+    rec = _edges_from_tiles(pg)
+    assert rec.shape[0] == g.n_edges
+    # Every original (src, dst, w) appears exactly once, via edge_pos.
+    eid = rec[:, 3].astype(np.int64)
+    assert len(np.unique(eid)) == g.n_edges
+    np.testing.assert_array_equal(rec[:, 0].astype(np.int64), g.src[eid])
+    np.testing.assert_array_equal(rec[:, 1].astype(np.int64), g.dst[eid])
+    np.testing.assert_allclose(rec[:, 2], g.weight[eid], rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(nv=st.integers(10, 200), ne=st.integers(1, 600),
+       cap=st.sampled_from([8, 16, 32]), seed=st.integers(0, 3))
+def test_width_cap_respected(nv, ne, cap, seed):
+    g = G.random_graph(nv, ne, seed=seed, degree="powerlaw")
+    pg = partition_graph(g, PartitionConfig(n1=16, n2=8, width_cap=cap))
+    for ts in pg.tiles.values():
+        for t in ts:
+            assert t.width <= max(cap, 8)
+
+
+def test_inv_in_degree():
+    g = G.random_graph(40, 200, seed=0)
+    pg = partition_graph(g, PartitionConfig(n1=16, n2=8))
+    deg = np.bincount(g.dst, minlength=40)
+    np.testing.assert_allclose(
+        pg.inv_in_degree[:40], 1.0 / np.maximum(deg, 1.0), rtol=1e-6)
+
+
+def test_choose_partition_fits_budget():
+    for f in [4, 64, 500, 4096]:
+        cfg = choose_partition(100000, f, vmem_budget_bytes=1 << 20)
+        assert cfg.n1 * cfg.n2 * 4 <= (1 << 20)
+        assert cfg.n1 >= 8 and cfg.n2 >= 8
+
+
+def test_dst_sorting_within_rows():
+    """Compile-time RAW elimination: per tile, each row's edges are
+    contiguous; row ownership is unique per output row (DESIGN.md §2)."""
+    g = G.random_graph(60, 400, seed=1)
+    pg = partition_graph(g, PartitionConfig(n1=16, n2=8))
+    for (j, k), ts in pg.tiles.items():
+        for t in ts:
+            valid = t.edge_pos >= 0
+            # no valid entry may appear after an invalid one in a row
+            for r in range(valid.shape[0]):
+                row = valid[r]
+                if row.any():
+                    last = np.max(np.nonzero(row))
+                    assert row[: last + 1].all()
