@@ -1,10 +1,17 @@
-"""Shared benchmark plumbing: dataset roster, timing helpers, CSV."""
+"""Shared benchmark plumbing: dataset roster, timing helpers, CSV.
+
+All benchmarks drive the unified ``repro.engine.Engine`` API: programs
+are compiled through ``engine.compile`` and executed by decoding their
+128-bit ISA binaries (``engine.run``).  ``prog.source`` keeps the
+in-process pass reports + object-graph Program for the analytic perf
+model and the report columns.
+"""
 from __future__ import annotations
 
 import os
 import sys
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -12,11 +19,9 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core import gnn_builders as B  # noqa: E402
 from repro.core import graph as G  # noqa: E402
-from repro.core.compiler import CompileOptions, compile_model  # noqa: E402
-from repro.core.executor import OverlayExecutor  # noqa: E402
 from repro.core.perfmodel import predict_loh  # noqa: E402
+from repro.engine import CompiledProgram, Engine  # noqa: E402
 
 # dataset -> synthesis scale (big graphs scaled for CPU wall-time; always
 # labeled in output).  PCIe model matches the paper's 31.5 GB/s.
@@ -45,25 +50,29 @@ def features(g: "G.Graph") -> jnp.ndarray:
     return jnp.asarray(G.random_features(g, seed=1))
 
 
-def run_model(bname: str, g: "G.Graph", x, executor: OverlayExecutor,
-              opts: Optional[CompileOptions] = None, warm: int = 1,
-              reps: int = 1):
-    """Returns (t_loc, t_loh, t_comm, cr, t_pred)."""
-    model = B.build(bname, g)
-    cr = compile_model(model, g, opts or CompileOptions())
+def run_model(bname: str, g: "G.Graph", x, engine: Engine,
+              warm: int = 1, reps: int = 1, *, order_opt: bool = True,
+              fusion: bool = True):
+    """Returns (t_loc, t_loh, t_comm, prog, t_pred)."""
+    prog: CompiledProgram = engine.compile(
+        bname, g, order_opt=order_opt, fusion=fusion)
+    if prog.source is None:
+        # program-cache hit returned a slim copy; the benchmarks need the
+        # pass reports + object-graph Program for the analytic perf model
+        prog = engine.compile(bname, g, order_opt=order_opt,
+                              fusion=fusion, use_cache=False)
     for _ in range(warm):
-        jax.block_until_ready(executor.run(cr.program, x))
+        jax.block_until_ready(engine.run(prog, x))
     t0 = time.perf_counter()
     for _ in range(reps):
-        jax.block_until_ready(executor.run(cr.program, x))
+        jax.block_until_ready(engine.run(prog, x))
     t_loh = (time.perf_counter() - t0) / reps
     data_bytes = (g.n_edges * 12 + g.n_vertices * g.feat_dim * 4
-                  + len(cr.binary)
-                  + sum(np.asarray(w).nbytes
-                        for w in cr.program.model.weights.values()))
+                  + len(prog.binary)
+                  + sum(np.asarray(w).nbytes for w in prog.weights.values()))
     t_comm = data_bytes / PCIE_BW
-    t_pred = predict_loh(cr.program)
-    return cr.t_loc, t_loh, t_comm, cr, t_pred
+    t_pred = predict_loh(prog.source.program)
+    return prog.t_loc, t_loh, t_comm, prog, t_pred
 
 
 def emit(rows: List[str]) -> None:

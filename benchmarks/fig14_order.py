@@ -4,8 +4,7 @@ exact values depend on the IR decomposition — trends must match:
 large for b1/b7, zero for b8)."""
 from __future__ import annotations
 
-from .common import (CompileOptions, MODELS, OverlayExecutor, dataset,
-                     emit, features, run_model)
+from .common import (Engine, MODELS, dataset, emit, features, run_model)
 
 GRAPHS = [("CO", 1.0), ("PU", 1.0)]
 
@@ -13,17 +12,18 @@ GRAPHS = [("CO", 1.0), ("PU", 1.0)]
 def run(quick: bool = False) -> None:
     graphs = GRAPHS[:1] if quick else GRAPHS
     models = ["b1", "b2", "b7", "b8"] if quick else MODELS
-    ex = OverlayExecutor()
+    engine = Engine()
     for bname in models:
         for dname, scale in graphs:
             g = dataset(dname, scale)
             x = features(g)
-            _, t_on, _, cr_on, p_on = run_model(
-                bname, g, x, ex, CompileOptions(order_opt=True))
-            _, t_off, _, cr_off, p_off = run_model(
-                bname, g, x, ex, CompileOptions(order_opt=False))
+            _, t_on, _, prog_on, p_on = run_model(
+                bname, g, x, engine, order_opt=True)
+            _, t_off, _, prog_off, p_off = run_model(
+                bname, g, x, engine, order_opt=False)
             label = dname if scale == 1.0 else f"{dname}@{scale:g}"
+            rep = prog_on.source.order_report
             emit([f"fig14,{bname}/{label},{t_on * 1e6:.0f},"
                   f"speedup={(t_off / t_on - 1) * 100:.1f}%;"
                   f"pred_speedup={(p_off / p_on - 1) * 100:.1f}%;"
-                  f"cc_red={cr_on.order_report.reduction * 100:.1f}%"])
+                  f"cc_red={rep.reduction * 100:.1f}%"])

@@ -1,8 +1,7 @@
 """Paper Fig. 15: impact of layer fusion on T_LoH (paper: 4.7-8.2%)."""
 from __future__ import annotations
 
-from .common import (CompileOptions, MODELS, OverlayExecutor, dataset,
-                     emit, features, run_model)
+from .common import (Engine, MODELS, dataset, emit, features, run_model)
 
 GRAPHS = [("PU", 1.0)]
 
@@ -10,18 +9,18 @@ GRAPHS = [("PU", 1.0)]
 def run(quick: bool = False) -> None:
     graphs = GRAPHS[:1] if quick else GRAPHS
     models = ["b1", "b5", "b8"] if quick else MODELS
-    ex = OverlayExecutor()
+    engine = Engine()
     for bname in models:
         for dname, scale in graphs:
             g = dataset(dname, scale)
             x = features(g)
-            _, t_on, _, cr_on, p_on = run_model(
-                bname, g, x, ex, CompileOptions(fusion=True))
-            _, t_off, _, cr_off, p_off = run_model(
-                bname, g, x, ex, CompileOptions(fusion=False))
+            _, t_on, _, prog_on, p_on = run_model(
+                bname, g, x, engine, fusion=True)
+            _, t_off, _, prog_off, p_off = run_model(
+                bname, g, x, engine, fusion=False)
             label = dname if scale == 1.0 else f"{dname}@{scale:g}"
-            layers = (f"{cr_off.program.model.num_layers}->"
-                      f"{cr_on.program.model.num_layers}")
+            layers = (f"{prog_off.source.program.model.num_layers}->"
+                      f"{prog_on.source.program.model.num_layers}")
             emit([f"fig15,{bname}/{label},{t_on * 1e6:.0f},"
                   f"speedup={(t_off / t_on - 1) * 100:.1f}%;"
                   f"pred_speedup={(p_off / p_on - 1) * 100:.1f}%;"

@@ -5,8 +5,7 @@ from __future__ import annotations
 
 from repro.core.perfmodel import predict_loh
 
-from .common import (CompileOptions, MODELS, OverlayExecutor, dataset,
-                     emit, features, run_model)
+from .common import (Engine, MODELS, dataset, emit, features, run_model)
 
 GRAPHS = [("PU", 1.0)]
 
@@ -14,16 +13,16 @@ GRAPHS = [("PU", 1.0)]
 def run(quick: bool = False) -> None:
     graphs = GRAPHS[:1] if quick else GRAPHS
     models = ["b1", "b2"] if quick else MODELS
-    ex_on = OverlayExecutor(overlap=True)
-    ex_off = OverlayExecutor(overlap=False)
+    eng_on = Engine(overlap=True)
+    eng_off = Engine(overlap=False)
     for bname in models:
         for dname, scale in graphs:
             g = dataset(dname, scale)
             x = features(g)
-            _, t_on, _, cr, _ = run_model(bname, g, x, ex_on)
-            _, t_off, _, _, _ = run_model(bname, g, x, ex_off)
-            p_on = predict_loh(cr.program, overlap=True)
-            p_off = predict_loh(cr.program, overlap=False)
+            _, t_on, _, prog, _ = run_model(bname, g, x, eng_on)
+            _, t_off, _, _, _ = run_model(bname, g, x, eng_off)
+            p_on = predict_loh(prog.source.program, overlap=True)
+            p_off = predict_loh(prog.source.program, overlap=False)
             label = dname if scale == 1.0 else f"{dname}@{scale:g}"
             emit([f"fig16,{bname}/{label},{t_on * 1e6:.0f},"
                   f"speedup={(t_off / t_on - 1) * 100:.1f}%;"

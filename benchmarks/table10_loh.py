@@ -12,7 +12,7 @@ import jax.numpy as jnp
 from repro.core import gnn_builders as B
 from repro.core import reference as R
 
-from .common import OverlayExecutor, dataset, emit, features, run_model
+from .common import Engine, dataset, emit, features, run_model
 
 GRAPHS = [("FL", 0.125), ("RE", 1 / 256), ("YE", 1 / 64), ("AP", 1 / 512)]
 
@@ -24,11 +24,11 @@ PAPER_LOH_MS = {"FL": 11.5, "RE": 97.2, "YE": 104.3, "AP": 315.9}
 
 def run(quick: bool = False) -> None:
     graphs = GRAPHS[:1] if quick else GRAPHS
-    ex = OverlayExecutor()
+    engine = Engine()
     for dname, scale in graphs:
         g = dataset(dname, scale)
         x = features(g)
-        _, t_loh, _, cr, t_pred = run_model("b2", g, x, ex)
+        _, t_loh, _, prog, t_pred = run_model("b2", g, x, engine)
         model = B.build("b2", g)
         ref = jax.jit(lambda xx: R.run_reference(model, g, xx))
         jax.block_until_ready(ref(x))

@@ -3,21 +3,22 @@
 TPU-v5e T_LoH from the analytic perf model."""
 from __future__ import annotations
 
-from .common import (BIG_MODELS, DATASETS, MODELS, OverlayExecutor,
-                     dataset, emit, features, run_model)
+from .common import (BIG_MODELS, DATASETS, Engine, MODELS, dataset, emit,
+                     features, run_model)
 
 
 def run(quick: bool = False) -> None:
     ds = DATASETS[:3] if quick else DATASETS
     models = MODELS[:2] if quick else MODELS
-    ex = OverlayExecutor()
+    engine = Engine()
     for bname in models:
         for dname, scale in ds:
             if scale < 1.0 and bname not in BIG_MODELS:
                 continue
             g = dataset(dname, scale)
             x = features(g)
-            t_loc, t_loh, t_comm, cr, t_pred = run_model(bname, g, x, ex)
+            t_loc, t_loh, t_comm, prog, t_pred = run_model(
+                bname, g, x, engine)
             e2e = t_loc + t_comm + t_loh
             label = dname if scale == 1.0 else f"{dname}@{scale:g}"
             emit([f"table7,{bname}/{label}/T_LoC,{t_loc * 1e6:.0f},"
@@ -25,4 +26,4 @@ def run(quick: bool = False) -> None:
                   f"table7,{bname}/{label}/T_LoH,{t_loh * 1e6:.0f},"
                   f"pred_tpu_ms={t_pred * 1e3:.3f}",
                   f"table7,{bname}/{label}/T_comm,{t_comm * 1e6:.0f},"
-                  f"binary_B={len(cr.binary)}"])
+                  f"binary_B={len(prog.binary)}"])

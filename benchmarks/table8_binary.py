@@ -1,20 +1,19 @@
 """Paper Table 8: size of the generated binaries vs the input graphs."""
 from __future__ import annotations
 
-from .common import (DATASETS, MODELS, CompileOptions, compile_model,
-                     dataset, emit)
-from repro.core import gnn_builders as B
+from .common import DATASETS, Engine, MODELS, dataset, emit
 
 
 def run(quick: bool = False) -> None:
     ds = DATASETS[:3] if quick else DATASETS
     models = MODELS[:2] if quick else MODELS
+    engine = Engine()
     for bname in models:
         for dname, scale in ds:
             g = dataset(dname, scale)
-            cr = compile_model(B.build(bname, g), g, CompileOptions())
+            prog = engine.compile(bname, g)
             graph_bytes = g.n_edges * 12 + g.n_vertices * g.feat_dim * 4
             label = dname if scale == 1.0 else f"{dname}@{scale:g}"
-            emit([f"table8,{bname}/{label},{cr.t_loc * 1e6:.0f},"
-                  f"binary_B={len(cr.binary)};graph_B={graph_bytes};"
-                  f"ratio={len(cr.binary) / graph_bytes:.2e}"])
+            emit([f"table8,{bname}/{label},{prog.t_loc * 1e6:.0f},"
+                  f"binary_B={len(prog.binary)};graph_B={graph_bytes};"
+                  f"ratio={len(prog.binary) / graph_bytes:.2e}"])

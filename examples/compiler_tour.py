@@ -9,7 +9,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import gnn_builders as B  # noqa: E402
 from repro.core import graph as G  # noqa: E402
-from repro.core.compiler import CompileOptions, compile_model  # noqa: E402
+from repro.engine import Engine  # noqa: E402
 from repro.core.isa import Opcode, disassemble  # noqa: E402
 from repro.core.passes import fusion, order_opt  # noqa: E402
 from repro.core.passes.partition import (PartitionConfig,  # noqa: E402
@@ -47,10 +47,10 @@ def main() -> None:
           f"{pg.tile_bytes() / 1e6:.2f} MB of tiles\n")
 
     print("== Step 4 + codegen: 128-bit instruction stream ==")
-    cr = compile_model(model, g, CompileOptions(
-        partition=cfg))
-    instrs = disassemble(cr.binary)
-    print(f"{len(instrs)} instructions, {len(cr.binary)} bytes; "
+    engine = Engine(geometry=cfg)
+    prog = engine.compile(model, g)
+    instrs = disassemble(prog.binary)
+    print(f"{len(instrs)} instructions, {len(prog.binary)} bytes; "
           f"first Layer Block:")
     shown = 0
     for ins in instrs:
@@ -59,7 +59,7 @@ def main() -> None:
         if shown > 1 and ins.op == Opcode.CSI or shown > 14:
             break
     print(f"\nworst per-layer PE load imbalance: "
-          f"{cr.schedule_report.worst_imbalance:.2f}x "
+          f"{prog.source.schedule_report.worst_imbalance:.2f}x "
           f"(LPT over edge-count costs)")
 
 

@@ -1,11 +1,15 @@
-"""Quickstart: compile and run a GCN with the GraphAGILE overlay.
+"""Quickstart: compile and run a GCN with the GraphAGILE Engine.
 
   PYTHONPATH=src python examples/quickstart.py
+  (or `pip install -e .` once and drop the PYTHONPATH)
 
 Builds a Cora-like synthetic graph, compiles a 2-layer GCN through the
 full pipeline (order optimization -> fusion -> fiber-shard partitioning
--> kernel mapping/scheduling -> 128-bit binary), executes it on the
-Adaptive Computation Kernel, and verifies against the pure-jnp reference.
+-> kernel mapping/scheduling -> 128-bit binary), executes it **by
+decoding that binary** on the Adaptive Computation Kernel, verifies
+against the pure-jnp reference, then demonstrates the overlay contract:
+the ``.gagi`` bundle saved here can be loaded by a *fresh* engine in a
+later session and served with zero recompilation.
 """
 import os
 import sys
@@ -13,14 +17,12 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
 
 from repro.core import gnn_builders as B  # noqa: E402
 from repro.core import graph as G  # noqa: E402
 from repro.core import reference as R  # noqa: E402
-from repro.core.compiler import CompileOptions, compile_model  # noqa: E402
-from repro.core.executor import OverlayExecutor  # noqa: E402
 from repro.core.perfmodel import predict_loh  # noqa: E402
+from repro.engine import Engine  # noqa: E402
 
 
 def main() -> None:
@@ -32,23 +34,34 @@ def main() -> None:
     model = B.build_gcn(g, hidden=16, n_layers=2)   # the paper's b1
     print("IR:", model.dump())
 
-    cr = compile_model(model, g, CompileOptions())
-    print(f"\ncompiled in {cr.t_loc * 1e3:.1f} ms "
+    engine = Engine()                               # the overlay
+    prog = engine.compile(model, g)
+    cr = prog.source                                # pass reports
+    print(f"\ncompiled in {prog.t_loc * 1e3:.1f} ms "
           f"(the paper's T_LoC; hours for regenerate-the-bitstream flows)")
     print(f"order opt: {len(cr.order_report.exchanges)} exchanges, "
           f"complexity -{cr.order_report.reduction:.1%}")
     print(f"fusion: {cr.fusion_report.layers_before} -> "
           f"{cr.fusion_report.layers_after} layers")
-    print(f"binary: {len(cr.binary)} bytes "
-          f"({cr.program.instruction_count()} instructions x 128 bit)")
+    print(f"binary: {len(prog.binary)} bytes "
+          f"({prog.instruction_count()} instructions x 128 bit)")
     print(f"predicted T_LoH on TPU v5e: {predict_loh(cr.program)*1e3:.3f} ms")
 
-    ex = OverlayExecutor()
-    y = ex.run(cr.program, x)
+    y = engine.run(prog, x)                         # decodes the binary
     y_ref = R.run_reference(model, g, x)
     err = float(jnp.max(jnp.abs(y - y_ref)))
     print(f"\noverlay output {y.shape}, max |err| vs reference: {err:.2e}")
     assert err < 1e-4
+
+    # The overlay contract on disk: binary + weights/graph manifest.
+    path = os.path.join(os.path.dirname(__file__), "gcn_cora.gagi")
+    prog.save(path)
+    fresh = Engine()                                # a later session
+    y2 = fresh.run(fresh.load(path), x)
+    assert bool(jnp.array_equal(y, y2))
+    print(f"saved {os.path.getsize(path)} B to {os.path.basename(path)}; "
+          f"a fresh engine replayed it bit-identically (T_LoC = 0)")
+    os.remove(path)
     print("OK")
 
 

@@ -1,3 +1,9 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# Public entry point: `repro.engine.Engine` — compile a (model, graph)
+# pair to a 128-bit instruction binary, execute by decoding it, save /
+# load `.gagi` bundles, and serve request streams with a program cache.
+# `core.compiler.compile_model` / `core.executor.OverlayExecutor` are
+# deprecated shims over that API.

@@ -7,11 +7,16 @@
 Pipeline: Input parsing/IR -> Step 1 order optimization -> Step 2 layer
 fusion -> Step 3 fiber-shard partitioning -> Step 4 kernel mapping + task
 scheduling -> code generation.
+
+The public entry point is :class:`repro.engine.Engine` (``engine.compile``
+wraps :func:`run_pipeline`); the module-level :func:`compile_model` /
+:func:`compile_benchmark` remain as deprecated shims.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Optional
 
 from .gnn_builders import BENCHMARKS
@@ -47,9 +52,10 @@ class CompileResult:
         return len(self.binary)
 
 
-def compile_model(
+def run_pipeline(
     model: ModelIR, g: Graph, opts: Optional[CompileOptions] = None
 ) -> CompileResult:
+    """The §6 software-compilation pipeline (internal entry point)."""
     opts = opts or CompileOptions()
     t0 = time.perf_counter()
 
@@ -75,8 +81,22 @@ def compile_model(
                          schedule_report=srep)
 
 
+def compile_model(
+    model: ModelIR, g: Graph, opts: Optional[CompileOptions] = None
+) -> CompileResult:
+    """Deprecated shim — use ``repro.engine.Engine.compile`` instead."""
+    warnings.warn(
+        "compile_model is deprecated; use repro.engine.Engine.compile "
+        "(binary-driven execution, program cache, save/load)",
+        DeprecationWarning, stacklevel=2)
+    return run_pipeline(model, g, opts)
+
+
 def compile_benchmark(name: str, g: Graph, seed: int = 0,
                       opts: Optional[CompileOptions] = None) -> CompileResult:
-    """Compile one of the paper's b1..b8 models for graph ``g``."""
+    """Deprecated shim — use ``engine.compile("b1", g)`` instead."""
+    warnings.warn(
+        "compile_benchmark is deprecated; use repro.engine.Engine.compile "
+        "with a benchmark name", DeprecationWarning, stacklevel=2)
     model = BENCHMARKS[name](g, seed)
-    return compile_model(model, g, opts)
+    return run_pipeline(model, g, opts)

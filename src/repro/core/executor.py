@@ -1,346 +1,61 @@
-"""Overlay executor — runs a compiled Program on the ACK (paper Alg. 9).
+"""Deprecated shim — the overlay executor now lives in ``repro.engine``.
 
-Execution is layer by layer.  Within a layer, tiling blocks run in the
-PE-interleaved order the scheduler produced; with ``overlap=True`` all tile
-ops are dispatched asynchronously and synchronized once per layer (the
-double/triple-buffering analogue — XLA overlaps transfers and compute);
-with ``overlap=False`` every tiling block is forced to completion before
-the next starts (Fig. 16 ablation baseline).
+``OverlayExecutor`` used to walk in-memory ``Program`` layer objects.
+Execution is now *binary-driven* (``repro.engine.executor.BinaryExecutor``
+interprets the decoded 128-bit instruction stream), so this class survives
+only as a thin adapter: it wraps the old ``run(program, x)`` signature by
+serializing the object-graph ``Program`` to its ISA binary + manifest once
+and delegating every call to the binary path.  Weight rebinding on
+``prog.model.weights`` between runs is honored (read live, as before),
+but *structural* mutation of an already-compiled Program's layers is not
+— the snapshot binary is replayed; recompile instead.  New code should
+use::
 
-All vertex-valued intermediates live padded to (n_blocks*N1, ceil(f/N2)*N2)
-— the fiber-shard layout — so layer outputs feed the next layer with no
-repartitioning (paper §6.5).
+    from repro.engine import Engine
+    engine = Engine()
+    prog = engine.compile(model, graph)
+    y = engine.run(prog, x)
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional, Tuple
+import warnings
+from typing import Dict, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .ack import ACK
-from .ir import Activation, AggOp, LayerIR, LayerType, ModelIR
-from .passes.kernel_map import Program, TilingBlock
-from .reference import apply_activation
+from repro.engine.executor import BinaryExecutor, ExecStats  # noqa: F401
+from repro.engine.program import from_program
 
-
-@dataclasses.dataclass
-class ExecStats:
-    tile_ops: int = 0
-    layers: int = 0
+from .passes.kernel_map import Program
 
 
 class OverlayExecutor:
+    """Deprecated: use ``repro.engine.Engine`` instead."""
+
     def __init__(self, backend: str = "xla", overlap: bool = True,
                  interpret: bool = True) -> None:
-        self.ack = ACK(backend=backend, interpret=interpret)
+        warnings.warn(
+            "OverlayExecutor is deprecated; use repro.engine.Engine "
+            "(binary-driven execution)", DeprecationWarning, stacklevel=2)
+        self._executor = BinaryExecutor(backend=backend, overlap=overlap,
+                                        interpret=interpret)
+        self.ack = self._executor.ack
         self.overlap = overlap
-        self.stats = ExecStats()
 
-    # ------------------------------------------------------------------ #
+    @property
+    def stats(self) -> ExecStats:
+        return self._executor.stats
+
     def run(self, prog: Program, x: jnp.ndarray,
             weights: Optional[Dict[str, np.ndarray]] = None) -> jnp.ndarray:
-        m, pg = prog.model, prog.pgraph
-        weights = weights if weights is not None else m.weights
-        cfg = pg.config
-        n1, n2, nb = cfg.n1, cfg.n2, pg.n_blocks
-        vp = nb * n1
-        ne = pg.n_edges
-
-        def pad_vertex(a: jnp.ndarray, f_pad: int) -> jnp.ndarray:
-            a = jnp.asarray(a, jnp.float32)
-            return jnp.pad(a, ((0, vp - a.shape[0]),
-                               (0, f_pad - a.shape[1])))
-
-        fin_pad0 = prog.f_pad[m.topo_order()[0]][0]
-        x_pad = pad_vertex(x, max(fin_pad0,
-                                  ((x.shape[1] + n2 - 1) // n2) * n2))
-        vals: Dict[int, jnp.ndarray] = {}      # layer -> padded output
-        edge_vals: Dict[int, jnp.ndarray] = {}  # layer -> (E,) edge scores
-
-        inv_deg = jnp.asarray(pg.inv_in_degree)
-
-        for lb in prog.layer_blocks:
-            l = lb.layer
-            self.stats.layers += 1
-            fi_pad, fo_pad = prog.f_pad[l.layer_id]
-            feat_parents = [p for p in l.parent_ids
-                            if p != l.attrs.get("edge_weight_layer")]
-            # Vertex-valued input (edge-valued parents resolve per-branch).
-            h_in = (vals.get(feat_parents[0], x_pad) if feat_parents
-                    else x_pad)
-
-            if l.layer_type == LayerType.AGGREGATE:
-                out = self._run_aggregate(lb, pg, h_in, edge_vals, inv_deg,
-                                          weights, fi_pad)
-                vals[l.layer_id] = out
-            elif l.layer_type == LayerType.LINEAR:
-                out = self._run_linear(lb, pg, h_in, weights, fi_pad, fo_pad)
-                vals[l.layer_id] = out
-            elif l.layer_type == LayerType.VECTOR_INNER:
-                edge_vals[l.layer_id] = self._run_vector_inner(
-                    lb, pg, h_in, weights, fi_pad)
-            elif l.layer_type == LayerType.VECTOR_ADD:
-                a_id, b_id = l.attrs["operands"]
-                xa = x_pad if a_id == -1 else vals[a_id]
-                xb = x_pad if b_id == -1 else vals[b_id]
-                vals[l.layer_id] = self._run_vadd(lb, pg, xa, xb, weights)
-            elif l.layer_type in (LayerType.ACTIVATION, LayerType.BATCHNORM):
-                if l.attrs.get("on_edges"):
-                    src = edge_vals[feat_parents[0]]
-                    edge_vals[l.layer_id] = self._run_edge_act(lb, pg, src)
-                else:
-                    vals[l.layer_id] = self._run_vertex_act(
-                        lb, pg, h_in, weights, fi_pad)
-            else:
-                raise ValueError(l.layer_type)
-            if not self.overlap:
-                tree = vals.get(l.layer_id, edge_vals.get(l.layer_id))
-                jax.block_until_ready(tree)
-
-        sinks = [i for i, l in m.layers.items() if not l.child_ids]
-        out_l = m.layers[sinks[-1]]
-        y = vals[out_l.layer_id]
-        nv = pg.n_vertices
-        return y[:nv, :out_l.f_out]
-
-    # ------------------------------------------------------------------ #
-    def _epilogue(self, l: LayerIR, tile: jnp.ndarray, weights, lo: int,
-                  hi: int) -> jnp.ndarray:
-        """Fused scale/shift + activation on a feature tile (cols lo:hi)."""
-        if "fused_scale" in l.attrs:
-            sc = jnp.asarray(np.asarray(
-                weights[l.attrs["fused_scale"]], np.float32))
-            sh = jnp.asarray(np.asarray(
-                weights[l.attrs["fused_shift"]], np.float32))
-            sc = jnp.pad(sc, (0, max(0, hi - sc.shape[0])))[lo:hi]
-            sh = jnp.pad(sh, (0, max(0, hi - sh.shape[0])))[lo:hi]
-            tile = self.ack.affine(tile, sc, sh)
-        if "fused_act" in l.attrs:
-            tile = self.ack.act(tile, Activation(l.attrs["fused_act"]))
-        return tile
-
-    def _assemble(self, tiles: Dict[Tuple[int, int], jnp.ndarray], nb: int,
-                  nf: int) -> jnp.ndarray:
-        rows = []
-        for j in range(nb):
-            rows.append(jnp.concatenate([tiles[(i, j)] for i in range(nf)],
-                                        axis=1))
-        return jnp.concatenate(rows, axis=0)
-
-    def _block_order(self, lb) -> List[TilingBlock]:
-        """PE-interleaved issue order (round-robin across PE streams)."""
-        streams: Dict[int, List[TilingBlock]] = {}
-        for tb in lb.tiling_blocks:
-            streams.setdefault(tb.pe, []).append(tb)
-        order: List[TilingBlock] = []
-        idx = 0
-        keys = sorted(streams)
-        while any(streams[k] for k in keys):
-            k = keys[idx % len(keys)]
-            if streams[k]:
-                order.append(streams[k].pop(0))
-            idx += 1
-        return order
-
-    # ------------------------------------------------------------------ #
-    def _run_aggregate(self, lb, pg, h_in, edge_vals, inv_deg, weights,
-                       fi_pad) -> jnp.ndarray:
-        l = lb.layer
-        cfg = pg.config
-        n1, n2, nb = cfg.n1, cfg.n2, pg.n_blocks
-        nf = fi_pad // n2
-        op = {AggOp.SUM: "sum", AggOp.MEAN: "mean",
-              AggOp.MAX: "max", AggOp.MIN: "min"}[l.agg_op]
-        ewl = l.attrs.get("edge_weight_layer")
-        ew = edge_vals[ewl] if ewl is not None else None
-        out_tiles: Dict[Tuple[int, int], jnp.ndarray] = {}
-        init = (jnp.full((n1, n2), -3.4e38, jnp.float32) if op == "max" else
-                jnp.full((n1, n2), 3.4e38, jnp.float32) if op == "min" else
-                jnp.zeros((n1, n2), jnp.float32))
-        for tb in self._block_order(lb):
-            i, j = tb.out_i, tb.out_j
-            acc = init
-            flag = jnp.zeros((n1,), bool)
-            for (k, s) in tb.k_list:
-                t = pg.tiles[(j, k)][s]
-                h_tile = jax.lax.dynamic_slice(
-                    h_in, (k * n1, i * n2), (n1, n2))
-                cols = jnp.asarray(t.cols)
-                mask = jnp.asarray(t.edge_pos >= 0)
-                if ew is None:
-                    v = jnp.asarray(t.vals)
-                else:
-                    epos = jnp.asarray(np.maximum(t.edge_pos, 0))
-                    v = jnp.where(mask, ew[epos], 0.0)
-                acc, flag = self.ack.spdmm(h_tile, cols, v, mask, acc,
-                                           flag, op)
-                self.stats.tile_ops += 1
-            if op in ("max", "min"):
-                acc = jnp.where(flag[:, None], acc, 0.0)
-            elif op == "mean":
-                scale = jax.lax.dynamic_slice(inv_deg, (j * n1,), (n1,))
-                acc = acc * scale[:, None]
-            acc = self._epilogue(l, acc, weights, i * n2, (i + 1) * n2)
-            out_tiles[(i, j)] = acc
-            if not self.overlap:
-                jax.block_until_ready(acc)
-        return self._assemble(out_tiles, nb, nf)
-
-    # ------------------------------------------------------------------ #
-    def _run_linear(self, lb, pg, h_in, weights, fi_pad, fo_pad):
-        l = lb.layer
-        cfg = pg.config
-        n1, n2, nb = cfg.n1, cfg.n2, pg.n_blocks
-        W = np.zeros((fi_pad, fo_pad), np.float32)
-        W0 = np.asarray(weights[l.attrs["W"]], np.float32)
-        W[: W0.shape[0], : W0.shape[1]] = W0
-        Wj = jnp.asarray(W)
-        b = None
-        if "b" in l.attrs:
-            b0 = np.asarray(weights[l.attrs["b"]], np.float32)
-            b = jnp.asarray(np.pad(b0, (0, fo_pad - b0.shape[0])))
-        out_tiles: Dict[Tuple[int, int], jnp.ndarray] = {}
-        for tb in self._block_order(lb):
-            i, j = tb.out_i, tb.out_j
-            acc = jnp.zeros((n1, n2), jnp.float32)
-            for (k, _) in tb.k_list:
-                h_tile = jax.lax.dynamic_slice(
-                    h_in, (j * n1, k * n2), (n1, n2))
-                w_tile = jax.lax.dynamic_slice(
-                    Wj, (k * n2, i * n2), (n2, n2))
-                acc = self.ack.gemm(h_tile, w_tile, acc)
-                self.stats.tile_ops += 1
-            if b is not None:
-                acc = acc + jax.lax.dynamic_slice(b, (i * n2,), (n2,))
-            acc = self._epilogue(l, acc, weights, i * n2, (i + 1) * n2)
-            out_tiles[(i, j)] = acc
-            if not self.overlap:
-                jax.block_until_ready(acc)
-        return self._assemble(out_tiles, nb, fo_pad // n2)
-
-    # ------------------------------------------------------------------ #
-    def _run_vector_inner(self, lb, pg, h_in, weights, fi_pad):
-        l = lb.layer
-        cfg = pg.config
-        n1, n2 = cfg.n1, cfg.n2
-        nf = fi_pad // n2
-        pair = l.attrs.get("mode") == "pair_sum"
-        ew = jnp.zeros((pg.n_edges + 1,), jnp.float32)
-        for tb in self._block_order(lb):
-            j, k, s = tb.out_j, tb.tile_k, tb.slice_id
-            t = pg.tiles[(j, k)][s]
-            cols = jnp.asarray(t.cols)
-            mask = jnp.asarray(t.edge_pos >= 0)
-            acc = jnp.zeros(cols.shape, jnp.float32)
-            n_fib = 1 if pair else nf
-            for i in range(n_fib):
-                h_dst = jax.lax.dynamic_slice(h_in, (j * n1, i * n2),
-                                              (n1, n2))
-                h_src = jax.lax.dynamic_slice(h_in, (k * n1, i * n2),
-                                              (n1, n2))
-                acc = self.ack.sddmm(h_dst, h_src, cols, mask, acc,
-                                     pair_sum=pair)
-                self.stats.tile_ops += 1
-            acc = self._epilogue(l, acc, weights, 0, n2)
-            epos = jnp.asarray(
-                np.where(t.edge_pos >= 0, t.edge_pos, pg.n_edges))
-            ew = ew.at[epos.ravel()].set(acc.ravel())
-            if not self.overlap:
-                jax.block_until_ready(ew)
-        return ew[: pg.n_edges]
-
-    # ------------------------------------------------------------------ #
-    def _run_vadd(self, lb, pg, xa, xb, weights):
-        l = lb.layer
-        cfg = pg.config
-        n1, n2, nb = cfg.n1, cfg.n2, pg.n_blocks
-        alpha, beta = l.attrs["alpha"], l.attrs["beta"]
-        fi_pad = max(xa.shape[1], xb.shape[1])
-        nf = fi_pad // n2
-        out_tiles = {}
-        for tb in self._block_order(lb):
-            i, j = tb.out_i, tb.out_j
-            ta = jax.lax.dynamic_slice(xa, (j * n1, i * n2), (n1, n2))
-            tc = jax.lax.dynamic_slice(xb, (j * n1, i * n2), (n1, n2))
-            t = self.ack.vadd(ta, tc, alpha, beta)
-            self.stats.tile_ops += 1
-            t = self._epilogue(l, t, weights, i * n2, (i + 1) * n2)
-            out_tiles[(i, j)] = t
-            if not self.overlap:
-                jax.block_until_ready(t)
-        return self._assemble(out_tiles, nb, nf)
-
-    # ------------------------------------------------------------------ #
-    def _run_vertex_act(self, lb, pg, h_in, weights, fi_pad):
-        l = lb.layer
-        cfg = pg.config
-        n1, n2, nb = cfg.n1, cfg.n2, pg.n_blocks
-        nf = fi_pad // n2
-        out_tiles = {}
-        for tb in self._block_order(lb):
-            i, j = tb.out_i, tb.out_j
-            t = jax.lax.dynamic_slice(h_in, (j * n1, i * n2), (n1, n2))
-            if l.layer_type == LayerType.BATCHNORM:
-                mu, sig, gam, bet = (
-                    np.asarray(weights[l.attrs[k]], np.float32)
-                    for k in ("mu", "sigma", "gamma", "beta"))
-                eps = float(l.attrs.get("eps", 1e-5))
-                sc = gam / np.sqrt(sig ** 2 + eps)
-                sh = bet - mu * sc
-                sc = np.pad(sc, (0, fi_pad - sc.shape[0]))
-                sh = np.pad(sh, (0, fi_pad - sh.shape[0]))
-                t = self.ack.affine(t, jnp.asarray(sc[i * n2:(i + 1) * n2]),
-                                    jnp.asarray(sh[i * n2:(i + 1) * n2]))
-            else:
-                t = self.ack.act(t, l.act)
-            self.stats.tile_ops += 1
-            out_tiles[(i, j)] = t
-            if not self.overlap:
-                jax.block_until_ready(t)
-        return self._assemble(out_tiles, nb, nf)
-
-    # ------------------------------------------------------------------ #
-    def _run_edge_act(self, lb, pg, ew_in):
-        """Edge activations; EDGE_SOFTMAX uses the two-pass tile scheme
-        (max/sum accumulated per destination row across a shard's tiles,
-        the Activation Unit's exp/divide applied per tile)."""
-        l = lb.layer
-        if l.act != Activation.EDGE_SOFTMAX:
-            out = apply_activation(ew_in, l.act)
-            self.stats.tile_ops += len(lb.tiling_blocks)
-            return out
-        n1 = pg.config.n1
-        nb = pg.n_blocks
-        ew = jnp.zeros((pg.n_edges + 1,), jnp.float32)
-        for j in range(nb):
-            row_tiles = [(k, s, t) for (jj, k), ts in sorted(pg.tiles.items())
-                         if jj == j for s, t in enumerate(ts)]
-            if not row_tiles:
-                continue
-            mx = jnp.full((n1,), -3.4e38, jnp.float32)
-            for _, _, t in row_tiles:
-                mask = jnp.asarray(t.edge_pos >= 0)
-                epos = jnp.asarray(np.maximum(t.edge_pos, 0))
-                sc = jnp.where(mask, ew_in[epos], -3.4e38)
-                mx = jnp.maximum(mx, jnp.max(sc, axis=1))
-            mx = jnp.where(mx <= -3.4e38, 0.0, mx)
-            den = jnp.zeros((n1,), jnp.float32)
-            exps = []
-            for _, _, t in row_tiles:
-                mask = jnp.asarray(t.edge_pos >= 0)
-                epos = jnp.asarray(np.maximum(t.edge_pos, 0))
-                e = jnp.where(mask, jnp.exp(ew_in[epos] - mx[:, None]), 0.0)
-                den = den + jnp.sum(e, axis=1)
-                exps.append((t, mask, e))
-                self.stats.tile_ops += 1
-            den = jnp.maximum(den, 1e-12)
-            for t, mask, e in exps:
-                out_t = e / den[:, None]
-                idx = jnp.asarray(
-                    np.where(t.edge_pos >= 0, t.edge_pos, pg.n_edges))
-                ew = ew.at[idx.ravel()].set(
-                    jnp.where(mask, out_t, 0.0).ravel())
-        return ew[: pg.n_edges]
+        view = getattr(prog, "_compiled_view", None)
+        if view is None:
+            view = from_program(prog)
+            prog._compiled_view = view
+        # The legacy executor read prog.model.weights live on every call;
+        # keep that (the view's snapshot would go stale if a caller
+        # rebinds entries of model.weights between runs).
+        if weights is None:
+            weights = prog.model.weights
+        return self._executor.run(view, x, weights=weights)

@@ -10,6 +10,32 @@ Every high-level instruction is 128 bits, packed as ``uint32[4]``:
 The flags byte carries the double-buffer mutex annotations the compiler
 emits (paper §6.6): LOCK marks a memory-read that acquires a buffer,
 UNLOCK marks the compute instruction that releases it.
+
+Since format VERSION 3 the binary is *load-bearing*: the runtime
+(`repro.engine`) executes a program by decoding this stream, so every
+dispatch decision is encoded in instruction fields.  Per-opcode argument
+conventions:
+
+  CSI     args=(layer_id, layer_type, f_in, f_out)  arg4=#tiling blocks
+          act carries the layer's mode selector: the AggOp for AGGREGATE
+          layers, the Activation for ACTIVATION layers, 1 for pair-sum
+          VECTOR_INNER layers; on_edges set for edge-valued layers.
+  GEMM    args=(j, k, i, 0)        out row-block j, reduction fiber k,
+                                   output fiber i; arg4 = n1*n2*n2 MACs
+  SPDMM   args=(j, k, i, s<<1|dyn) sub-shard A(j,k) ELL slice s, input
+                                   fiber i, dyn=per-edge weights; arg4=nnz
+  SDDMM   args=(j, k, i, s)        arg4 = nnz
+  VADD    args=(i, j, 0, 0)
+  ACT/AFFINE (standalone layers)   vertex: args=(layer_id, i, j, 0)
+                                   edge:   args=(layer_id, j, k, s)
+  ACT/AFFINE (fused epilogue)      args=(layer_id, 0, 0, 0); applied to
+                                   the tiling block's accumulator
+  MEM_WR  args=(Buf.RESULT, region, i, j) / (.., OUT_EDGE, j, k);
+          FLAG_LAST terminates the enclosing tiling block.
+
+A tiling block is the instruction span up to (and including) the first
+FLAG_LAST; a layer block is a CSI plus its arg4-announced tiling blocks;
+HALT ends the program.
 """
 from __future__ import annotations
 
@@ -21,7 +47,9 @@ from typing import List, Tuple
 import numpy as np
 
 MAGIC = 0x47414749  # "GAGI"
-VERSION = 2
+VERSION = 3         # v3: self-describing coordinates (see module docstring)
+HEADER_BYTES = 16
+INSTR_BYTES = 16
 
 
 class Opcode(enum.IntEnum):
@@ -73,6 +101,19 @@ class Instr:
 
     # ------------------------------------------------------------------ #
     def encode(self) -> np.ndarray:
+        # Since ISA v3 these fields drive execution, so out-of-range
+        # values must fail loudly at codegen instead of silently wrapping
+        # into a wrong-but-decodable binary.
+        for name, val, hi in (("pe", self.pe, 0xFF), ("act", self.act, 0x3F),
+                              ("flags", self.flags, 0xFF),
+                              ("arg4", self.arg4, 0xFFFFFFFF),
+                              *((f"args[{i}]", a, 0xFFFF)
+                                for i, a in enumerate(self.args))):
+            if not 0 <= int(val) <= hi:
+                raise ValueError(
+                    f"{self.op.name}: field {name}={val} exceeds its "
+                    f"encoding range [0, {hi}] — model/graph too large "
+                    f"for the 128-bit instruction format")
         w0 = ((int(self.op) & 0xFF)
               | (self.pe & 0xFF) << 8
               | (self.act & 0x3F) << 16
@@ -116,7 +157,31 @@ def assemble(instrs: List[Instr]) -> bytes:
 
 
 def disassemble(blob: bytes) -> List[Instr]:
+    """Decode a binary produced by :func:`assemble`.
+
+    Raises ``ValueError`` (never a bare assert / numpy reshape crash) on a
+    wrong magic, an incompatible format version, or a body shorter than
+    the instruction count announced in the header.
+    """
+    if len(blob) < HEADER_BYTES:
+        raise ValueError(
+            f"GraphAGILE binary too short: {len(blob)} bytes, need at "
+            f"least the {HEADER_BYTES}-byte header")
     magic, version, n, _ = struct.unpack_from("<IIII", blob, 0)
-    assert magic == MAGIC and version == VERSION, "bad binary"
-    words = np.frombuffer(blob, dtype="<u4", offset=16).reshape(n, 4)
+    if magic != MAGIC:
+        raise ValueError(
+            f"bad magic 0x{magic:08X}: not a GraphAGILE binary "
+            f"(expected 0x{MAGIC:08X} 'GAGI')")
+    if version != VERSION:
+        raise ValueError(
+            f"unsupported GraphAGILE binary version {version} "
+            f"(this runtime decodes version {VERSION})")
+    expected = HEADER_BYTES + n * INSTR_BYTES
+    if len(blob) < expected:
+        raise ValueError(
+            f"truncated GraphAGILE binary: header announces {n} "
+            f"instructions ({expected} bytes) but only {len(blob)} "
+            f"bytes are present")
+    words = np.frombuffer(blob, dtype="<u4", offset=HEADER_BYTES,
+                          count=n * 4).reshape(n, 4)
     return [Instr.decode(w) for w in words]

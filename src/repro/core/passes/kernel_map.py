@@ -104,9 +104,12 @@ def map_layer(
                                 Opcode.MEM_RD,
                                 args=(Buf.EDGE, Region.EDGE_WEIGHTS, j, k)))
                         acc = FLAG_ACC if ks else 0
+                        # args[3] packs (ELL slice << 1 | dyn) so the
+                        # runtime can address pg.tiles[(j, k)][s].
                         ins.append(Instr(Opcode.SPDMM,
                                          flags=FLAG_UNLOCK | acc,
-                                         args=(j, k, i, dyn), arg4=t.nnz))
+                                         args=(j, k, i, (s << 1) | dyn),
+                                         arg4=t.nnz))
                         ks.append((k, s))
                         nnz_total += t.nnz
                 _epilogue(l, ins, on_edges=False)
@@ -131,7 +134,7 @@ def map_layer(
                                            k, i)))
                     acc = FLAG_ACC if ks else 0
                     ins.append(Instr(Opcode.GEMM, flags=FLAG_UNLOCK | acc,
-                                     args=(n1, n2, n2, 0),
+                                     args=(j, k, i, 0),
                                      arg4=n1 * n2 * n2))
                     ks.append((k, 0))
                 _epilogue(l, ins, on_edges=False)
@@ -232,7 +235,18 @@ def run(m: ModelIR, pg: PartitionedGraph, n_pes: int = 8) -> Program:
     for lid in m.topo_order():
         l = m.layers[lid]
         tbs = map_layer(l, pg, nb)
-        csi = Instr(Opcode.CSI,
+        # The CSI act field is the layer's mode selector (ISA v3): AggOp
+        # for AGGREGATE, Activation for ACTIVATION, 1 for pair-sum
+        # VECTOR_INNER — so the runtime dispatches from the binary alone.
+        if l.layer_type == LayerType.AGGREGATE:
+            mode = int(l.agg_op)
+        elif l.layer_type == LayerType.VECTOR_INNER:
+            mode = 1 if l.attrs.get("mode") == "pair_sum" else 0
+        else:
+            mode = int(l.act)
+        csi = Instr(Opcode.CSI, act=mode, act_en=l.act_enabled,
+                    on_edges=bool(l.attrs.get("on_edges"))
+                    or l.layer_type == LayerType.VECTOR_INNER,
                     args=(lid, int(l.layer_type), l.f_in, l.f_out),
                     arg4=len(tbs))
         layer_blocks.append(LayerBlock(lid, l, csi, tbs))

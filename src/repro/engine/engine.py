@@ -1,0 +1,277 @@
+"""The unified GraphAGILE engine — the repo's single public entry point.
+
+    from repro.engine import Engine
+
+    engine = Engine(geometry=PartitionConfig(n1=256, n2=32))
+    prog = engine.compile("b1", graph)          # -> CompiledProgram
+    y = engine.run(prog, x)                     # executes the 128-bit binary
+    prog.save("gcn_cora.gagi")                  # binary + manifest bundle
+    y2 = engine.run(engine.load("gcn_cora.gagi"), x)   # later session
+
+One ``Engine`` is one overlay instance: a fixed tile-geometry contract plus
+the ACK kernel cache, exactly like one FPGA bitstream.  Compiling a new
+model or a new graph changes the instruction binary only — never the
+kernels (the paper's "no reconfiguration" property).
+
+For serving traffic, ``engine.submit(request)`` / ``engine.serve(requests)``
+run a streaming loop with an LRU program cache keyed by (model schema
+hash, graph partition signature, geometry): repeated (model, graph)
+shapes skip software compilation and report ``T_LoC == 0``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+import warnings
+from typing import Any, Dict, Iterable, List, Optional, Union
+
+import jax
+import numpy as np
+
+from repro.core.compiler import CompileOptions, run_pipeline
+from repro.core.gnn_builders import build
+from repro.core.graph import Graph
+from repro.core.ir import ModelIR
+from repro.core.passes.partition import PartitionConfig
+
+from .cache import LRUCache
+from .executor import BinaryExecutor, ExecStats
+from .program import CompiledProgram, from_program
+
+ModelSpec = Union[str, ModelIR]
+
+
+# --------------------------------------------------------------------------- #
+# Cache-key signatures.
+# --------------------------------------------------------------------------- #
+def graph_signature(g: Graph) -> str:
+    """Partition signature of a graph: everything the compiled program
+    depends on — topology (Step 3) plus feat_dim/n_classes, which size
+    the layers of builder-constructed models.
+
+    The O(|E|) hash over the edge arrays is memoized on the graph object,
+    keyed by the array objects themselves (strong references, compared
+    with ``is``, so a freed array's id can never be mistaken for a new
+    one).  Deployed graphs are treated as immutable: rebinding arrays
+    (what ``dataclasses.replace`` and every Graph method do) invalidates
+    the memo; mutating array *contents* in place is not supported.
+    Repeated ``submit`` calls on the same deployed graph cost O(1); the
+    cheap scalars are folded in fresh every call.
+    """
+    cached = g.__dict__.get("_edge_digest")
+    if (cached is None or cached[0] is not g.src
+            or cached[1] is not g.dst or cached[2] is not g.weight):
+        h = hashlib.sha1()
+        h.update(np.ascontiguousarray(g.src).tobytes())
+        h.update(np.ascontiguousarray(g.dst).tobytes())
+        h.update(np.ascontiguousarray(g.weight).tobytes())
+        cached = (g.src, g.dst, g.weight, h.hexdigest())
+        g.__dict__["_edge_digest"] = cached
+    scalars = f"{g.n_vertices}:{g.n_edges}:{g.feat_dim}:{g.n_classes}"
+    return hashlib.sha1(f"{scalars}|{cached[3]}".encode()).hexdigest()
+
+
+def _weight_digest(model: ModelIR) -> str:
+    """SHA-1 over weight contents, memoized on the model keyed by the
+    array objects themselves (identity compared with ``is``, strong refs
+    held) — rebinding an entry invalidates the memo, so repeat submits of
+    the same ModelIR cost O(1); in-place array mutation is unsupported,
+    as for graphs."""
+    names = tuple(sorted(model.weights))
+    cached = model.__dict__.get("_weight_digest")
+    if (cached is None or cached[0] != names
+            or any(a is not model.weights[n]
+                   for n, a in zip(names, cached[1]))):
+        h = hashlib.sha1()
+        for name in names:
+            w = np.asarray(model.weights[name])
+            h.update(name.encode())
+            h.update(repr((w.shape, str(w.dtype))).encode())
+            h.update(w.tobytes())
+        cached = (names, tuple(model.weights[n] for n in names),
+                  h.hexdigest())
+        model.__dict__["_weight_digest"] = cached
+    return cached[2]
+
+
+def model_signature(model: ModelSpec, seed: int = 0) -> str:
+    """Schema hash of a model: layer DAG + weight contents.  The layer
+    structure (cheap, and mutable pre-compile) is hashed fresh every
+    call; the weight bytes (the O(MB) part) are memoized."""
+    if isinstance(model, str):
+        return f"bench:{model}:seed{seed}"
+    h = hashlib.sha1()
+    h.update(model.name.encode())
+    for lid in sorted(model.layers):
+        l = model.layers[lid]
+        h.update(repr((
+            lid, int(l.layer_type), l.f_in, l.f_out,
+            int(l.agg_op) if l.agg_op is not None else -1,
+            int(l.act), l.act_enabled, tuple(l.parent_ids),
+            tuple(sorted((k, repr(v)) for k, v in l.attrs.items())),
+        )).encode())
+    h.update(_weight_digest(model).encode())
+    return h.hexdigest()
+
+
+# --------------------------------------------------------------------------- #
+# Streaming request interface.
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class InferenceRequest:
+    """One unit of serving traffic: (model, graph, features)."""
+
+    model: ModelSpec              # benchmark name ("b1".."b8") or a ModelIR
+    graph: Graph
+    features: Any                 # [V, F] array
+    request_id: Optional[str] = None
+    seed: int = 0                 # builder seed when model is a name
+
+
+@dataclasses.dataclass
+class InferenceResponse:
+    request_id: str
+    output: Any                   # [V, n_classes] jnp array
+    t_loc: float                  # compile latency paid by THIS request (s)
+    t_loh: float                  # execution latency (s)
+    cache_hit: bool
+    cache_key: str
+    model_name: str
+    graph_name: str
+
+
+@dataclasses.dataclass
+class EngineStats:
+    requests: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    compiles: int = 0
+    total_t_loc: float = 0.0
+    total_t_loh: float = 0.0
+
+
+# --------------------------------------------------------------------------- #
+class Engine:
+    """One overlay instance: fixed tile contract + ACK kernel cache."""
+
+    def __init__(self, geometry: Optional[PartitionConfig] = None,
+                 n_pes: int = 8, backend: str = "xla", *,
+                 overlap: bool = True, interpret: bool = True,
+                 vmem_budget_bytes: int = 3 << 20,
+                 cache_capacity: int = 32) -> None:
+        self.geometry = geometry
+        self.n_pes = n_pes
+        self.backend = backend
+        self.vmem_budget_bytes = vmem_budget_bytes
+        self._executor = BinaryExecutor(backend=backend, overlap=overlap,
+                                        interpret=interpret)
+        self.cache: LRUCache[CompiledProgram] = LRUCache(cache_capacity)
+        self.stats = EngineStats()
+
+    # ------------------------------------------------------------------ #
+    @property
+    def exec_stats(self) -> ExecStats:
+        return self._executor.stats
+
+    def _geometry_tag(self) -> str:
+        if self.geometry is None:
+            return f"auto:{self.vmem_budget_bytes}"
+        return (f"n1={self.geometry.n1},n2={self.geometry.n2},"
+                f"cap={self.geometry.width_cap}")
+
+    def cache_key(self, model: ModelSpec, graph: Graph, *, seed: int = 0,
+                  order_opt: bool = True, fusion: bool = True) -> str:
+        parts = "|".join([
+            model_signature(model, seed), graph_signature(graph),
+            self._geometry_tag(), f"pes={self.n_pes}",
+            f"oo={int(order_opt)}", f"fu={int(fusion)}",
+        ])
+        return hashlib.sha1(parts.encode()).hexdigest()
+
+    # ------------------------------------------------------------------ #
+    def compile(self, model: ModelSpec, graph: Graph, *, seed: int = 0,
+                order_opt: bool = True, fusion: bool = True,
+                use_cache: bool = True,
+                _key: Optional[str] = None) -> CompiledProgram:
+        """Model + graph -> CompiledProgram (through the §6 pipeline).
+
+        ``model`` is a benchmark name ("b1".."b8", built with ``seed``) or
+        a :class:`ModelIR`.  Hits in the program cache skip compilation.
+        ``_key`` lets callers that already computed the cache key (submit)
+        skip rehashing the graph/weights.
+        """
+        key = _key or self.cache_key(model, graph, seed=seed,
+                                     order_opt=order_opt, fusion=fusion)
+        if use_cache:
+            cached = self.cache.get(key)
+            if cached is not None:
+                return cached
+        model_ir = build(model, graph, seed) if isinstance(model, str) \
+            else model
+        opts = CompileOptions(order_opt=order_opt, fusion=fusion,
+                              n_pes=self.n_pes, partition=self.geometry,
+                              vmem_budget_bytes=self.vmem_budget_bytes)
+        cr = run_pipeline(model_ir, graph, opts)
+        prog = from_program(cr.program, binary=cr.binary, t_loc=cr.t_loc,
+                            cache_key=key, graph_name=graph.name,
+                            source=cr)
+        self.stats.compiles += 1
+        self.stats.total_t_loc += cr.t_loc
+        if use_cache:
+            # The cached copy drops `source` (the full IR/Program/report
+            # graph): execution needs only binary+manifest+weights+tiles,
+            # so a long-lived serving cache stays slim.  The caller that
+            # paid for this compile still gets the reports.
+            self.cache.put(key, dataclasses.replace(prog, source=None))
+        return prog
+
+    def run(self, prog: CompiledProgram, x,
+            weights: Optional[Dict[str, np.ndarray]] = None):
+        """Execute a compiled program by decoding its ISA binary."""
+        return self._executor.run(prog, x, weights=weights)
+
+    def load(self, path: str) -> CompiledProgram:
+        """Load a ``.gagi`` bundle saved by ``CompiledProgram.save``."""
+        prog = CompiledProgram.load(path)
+        if self.geometry is not None:
+            geo = prog.manifest["geometry"]
+            mine = (self.geometry.n1, self.geometry.n2,
+                    self.geometry.width_cap)
+            theirs = (geo["n1"], geo["n2"], geo["width_cap"])
+            if theirs != mine:
+                warnings.warn(
+                    f"{path} was compiled for tile geometry "
+                    f"(n1, n2, width_cap)={theirs} but this engine is "
+                    f"fixed at {mine}; new tile kernels will be "
+                    f"compiled", stacklevel=2)
+        return prog
+
+    # ------------------------------------------------------------------ #
+    def submit(self, req: InferenceRequest) -> InferenceResponse:
+        """Serve one request: cached compile -> binary-driven execution."""
+        key = self.cache_key(req.model, req.graph, seed=req.seed)
+        hit = key in self.cache
+        prog = self.compile(req.model, req.graph, seed=req.seed, _key=key)
+        t0 = time.perf_counter()
+        y = self.run(prog, req.features)
+        jax.block_until_ready(y)
+        t_loh = time.perf_counter() - t0
+        t_loc = 0.0 if hit else prog.t_loc
+
+        self.stats.requests += 1
+        self.stats.cache_hits += int(hit)
+        self.stats.cache_misses += int(not hit)
+        self.stats.total_t_loh += t_loh
+        rid = req.request_id or f"req{self.stats.requests - 1}"
+        return InferenceResponse(
+            request_id=rid, output=y, t_loc=t_loc, t_loh=t_loh,
+            cache_hit=hit, cache_key=key, model_name=prog.model_name,
+            graph_name=req.graph.name)
+
+    def serve(self, requests: Iterable[InferenceRequest]
+              ) -> List[InferenceResponse]:
+        """Drain a request stream through :meth:`submit` (Alg. 9's
+        idle-PE rule at request granularity: the queue feeds the overlay
+        whenever it drains)."""
+        return [self.submit(r) for r in requests]

@@ -1,0 +1,358 @@
+"""Binary-driven overlay executor (paper Alg. 9, ISA v3 runtime).
+
+Unlike the original object-graph executor, this one consumes ONLY:
+
+  * the decoded 128-bit instruction stream (layer/tiling-block dispatch,
+    kernel kinds, tile coordinates, reduction order, fused epilogues,
+    PE assignment),
+  * the program manifest (weight-key indirections, dataflow operands,
+    scalar coefficients), and
+  * the DDR payload (weight arrays + fiber-shard ELL tiles).
+
+No in-memory ``Program``/``LayerIR`` objects appear on the hot path, so a
+``CompiledProgram`` loaded from a ``.gagi`` file executes identically to
+one compiled in-process — the overlay contract: one fixed substrate, any
+(model, graph) pair, driven purely by its binary.
+
+Execution is layer by layer; within a layer, tiling blocks are issued in
+PE-interleaved order (round-robin across the PE streams the scheduler
+encoded into the instructions).  ``overlap=True`` dispatches tile ops
+asynchronously (the double-buffering analogue); ``overlap=False`` forces
+every tiling block to completion (Fig. 16 ablation baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ack import ACK
+from repro.core.ir import Activation, AggOp, LayerType
+from repro.core.reference import apply_activation
+
+from .decoder import LayerPlan, TilePlan
+from .program import CompiledProgram
+
+
+@dataclasses.dataclass
+class ExecStats:
+    tile_ops: int = 0
+    layers: int = 0
+
+
+class BinaryExecutor:
+    """Executes a CompiledProgram by interpreting its decoded binary."""
+
+    def __init__(self, backend: str = "xla", overlap: bool = True,
+                 interpret: bool = True) -> None:
+        self.ack = ACK(backend=backend, interpret=interpret)
+        self.overlap = overlap
+        self.stats = ExecStats()
+
+    # ------------------------------------------------------------------ #
+    def run(self, prog: CompiledProgram, x: jnp.ndarray,
+            weights: Optional[Dict[str, np.ndarray]] = None) -> jnp.ndarray:
+        plan = prog.plan()
+        man = prog.manifest
+        pg = prog.pgraph
+        weights = weights if weights is not None else prog.weights
+        lmeta = man["layers"]
+        n1, n2, nb = pg.config.n1, pg.config.n2, pg.n_blocks
+        vp = nb * n1
+        nv = pg.n_vertices
+
+        def f_pad(f: int) -> int:
+            return ((max(f, 1) + n2 - 1) // n2) * n2
+
+        def pad_vertex(a: jnp.ndarray, fp: int) -> jnp.ndarray:
+            a = jnp.asarray(a, jnp.float32)
+            return jnp.pad(a, ((0, vp - a.shape[0]),
+                               (0, fp - a.shape[1])))
+
+        fin_pad0 = f_pad(plan.layers[0].f_in)
+        x_pad = pad_vertex(x, max(fin_pad0,
+                                  ((x.shape[1] + n2 - 1) // n2) * n2))
+        vals: Dict[int, jnp.ndarray] = {}       # layer -> padded output
+        edge_vals: Dict[int, jnp.ndarray] = {}  # layer -> (E,) edge scores
+        inv_deg = jnp.asarray(pg.inv_in_degree)
+
+        for lp in plan.layers:
+            meta = lmeta[str(lp.layer_id)]
+            self.stats.layers += 1
+            ewl = meta.get("edge_weight_layer")
+            feat_parents = [p for p in meta["parents"] if p != ewl]
+            h_in = (vals.get(feat_parents[0], x_pad) if feat_parents
+                    else x_pad)
+            lt = lp.layer_type
+
+            if lt == LayerType.AGGREGATE:
+                vals[lp.layer_id] = self._run_aggregate(
+                    lp, meta, pg, h_in, edge_vals, inv_deg, weights)
+            elif lt == LayerType.LINEAR:
+                vals[lp.layer_id] = self._run_linear(
+                    lp, meta, pg, h_in, weights)
+            elif lt == LayerType.VECTOR_INNER:
+                edge_vals[lp.layer_id] = self._run_vector_inner(
+                    lp, meta, pg, h_in, weights)
+            elif lt == LayerType.VECTOR_ADD:
+                a_id, b_id = meta["operands"]
+                xa = x_pad if a_id == -1 else vals[a_id]
+                xb = x_pad if b_id == -1 else vals[b_id]
+                vals[lp.layer_id] = self._run_vadd(
+                    lp, meta, pg, xa, xb, weights)
+            elif lt in (LayerType.ACTIVATION, LayerType.BATCHNORM):
+                if lp.on_edges:
+                    src = edge_vals[feat_parents[0]]
+                    edge_vals[lp.layer_id] = self._run_edge_act(lp, pg, src)
+                else:
+                    vals[lp.layer_id] = self._run_vertex_act(
+                        lp, meta, pg, h_in, weights)
+            else:
+                raise ValueError(lt)
+            if not self.overlap:
+                tree = vals.get(lp.layer_id, edge_vals.get(lp.layer_id))
+                jax.block_until_ready(tree)
+
+        sink = man["sink"]
+        return vals[sink][:nv, :man["sink_f_out"]]
+
+    # ------------------------------------------------------------------ #
+    def _epilogue(self, tp: TilePlan, meta: dict, tile: jnp.ndarray,
+                  weights, lo: int, hi: int) -> jnp.ndarray:
+        """Fused scale/shift + activation, in decoded instruction order."""
+        for kind, act_id in tp.epilogue:
+            if kind == "affine":
+                sc = jnp.asarray(np.asarray(
+                    weights[meta["fused_scale"]], np.float32))
+                sh = jnp.asarray(np.asarray(
+                    weights[meta["fused_shift"]], np.float32))
+                sc = jnp.pad(sc, (0, max(0, hi - sc.shape[0])))[lo:hi]
+                sh = jnp.pad(sh, (0, max(0, hi - sh.shape[0])))[lo:hi]
+                tile = self.ack.affine(tile, sc, sh)
+            else:
+                tile = self.ack.act(tile, Activation(act_id))
+        return tile
+
+    def _assemble(self, tiles: Dict[Tuple[int, int], jnp.ndarray], nb: int,
+                  nf: int) -> jnp.ndarray:
+        rows = []
+        for j in range(nb):
+            rows.append(jnp.concatenate([tiles[(i, j)] for i in range(nf)],
+                                        axis=1))
+        return jnp.concatenate(rows, axis=0)
+
+    def _block_order(self, lp: LayerPlan) -> List[TilePlan]:
+        """PE-interleaved issue order (round-robin across PE streams)."""
+        streams: Dict[int, List[TilePlan]] = {}
+        for tp in lp.tiles:
+            streams.setdefault(tp.pe, []).append(tp)
+        order: List[TilePlan] = []
+        idx = 0
+        keys = sorted(streams)
+        while any(streams[k] for k in keys):
+            k = keys[idx % len(keys)]
+            if streams[k]:
+                order.append(streams[k].pop(0))
+            idx += 1
+        return order
+
+    # ------------------------------------------------------------------ #
+    def _run_aggregate(self, lp, meta, pg, h_in, edge_vals, inv_deg,
+                       weights) -> jnp.ndarray:
+        n1, n2, nb = pg.config.n1, pg.config.n2, pg.n_blocks
+        nf = ((max(lp.f_in, 1) + n2 - 1) // n2)
+        op = {AggOp.SUM: "sum", AggOp.MEAN: "mean",
+              AggOp.MAX: "max", AggOp.MIN: "min"}[AggOp(lp.mode)]
+        ewl = meta.get("edge_weight_layer")
+        ew = edge_vals[ewl] if ewl is not None else None
+        out_tiles: Dict[Tuple[int, int], jnp.ndarray] = {}
+        init = (jnp.full((n1, n2), -3.4e38, jnp.float32) if op == "max" else
+                jnp.full((n1, n2), 3.4e38, jnp.float32) if op == "min" else
+                jnp.zeros((n1, n2), jnp.float32))
+        for tp in self._block_order(lp):
+            i, j = tp.out_i, tp.out_j
+            acc = init
+            flag = jnp.zeros((n1,), bool)
+            for ins in tp.compute:           # SPDMM steps, stream order
+                jj, k, ii = ins.args[0], ins.args[1], ins.args[2]
+                s, dyn = ins.args[3] >> 1, ins.args[3] & 1
+                t = pg.tiles[(jj, k)][s]
+                h_tile = jax.lax.dynamic_slice(
+                    h_in, (k * n1, ii * n2), (n1, n2))
+                cols = jnp.asarray(t.cols)
+                mask = jnp.asarray(t.edge_pos >= 0)
+                if not dyn:
+                    v = jnp.asarray(t.vals)
+                else:
+                    epos = jnp.asarray(np.maximum(t.edge_pos, 0))
+                    v = jnp.where(mask, ew[epos], 0.0)
+                acc, flag = self.ack.spdmm(h_tile, cols, v, mask, acc,
+                                           flag, op)
+                self.stats.tile_ops += 1
+            if op in ("max", "min"):
+                acc = jnp.where(flag[:, None], acc, 0.0)
+            elif op == "mean":
+                scale = jax.lax.dynamic_slice(inv_deg, (j * n1,), (n1,))
+                acc = acc * scale[:, None]
+            acc = self._epilogue(tp, meta, acc, weights,
+                                 i * n2, (i + 1) * n2)
+            out_tiles[(i, j)] = acc
+            if not self.overlap:
+                jax.block_until_ready(acc)
+        return self._assemble(out_tiles, nb, nf)
+
+    # ------------------------------------------------------------------ #
+    def _run_linear(self, lp, meta, pg, h_in, weights):
+        n1, n2, nb = pg.config.n1, pg.config.n2, pg.n_blocks
+        fi_pad = ((max(lp.f_in, 1) + n2 - 1) // n2) * n2
+        fo_pad = ((max(lp.f_out, 1) + n2 - 1) // n2) * n2
+        W = np.zeros((fi_pad, fo_pad), np.float32)
+        W0 = np.asarray(weights[meta["W"]], np.float32)
+        W[: W0.shape[0], : W0.shape[1]] = W0
+        Wj = jnp.asarray(W)
+        b = None
+        if "b" in meta:
+            b0 = np.asarray(weights[meta["b"]], np.float32)
+            b = jnp.asarray(np.pad(b0, (0, fo_pad - b0.shape[0])))
+        out_tiles: Dict[Tuple[int, int], jnp.ndarray] = {}
+        for tp in self._block_order(lp):
+            i, j = tp.out_i, tp.out_j
+            acc = jnp.zeros((n1, n2), jnp.float32)
+            for ins in tp.compute:           # GEMM steps: args=(j, k, i)
+                k = ins.args[1]
+                h_tile = jax.lax.dynamic_slice(
+                    h_in, (j * n1, k * n2), (n1, n2))
+                w_tile = jax.lax.dynamic_slice(
+                    Wj, (k * n2, i * n2), (n2, n2))
+                acc = self.ack.gemm(h_tile, w_tile, acc)
+                self.stats.tile_ops += 1
+            if b is not None:
+                acc = acc + jax.lax.dynamic_slice(b, (i * n2,), (n2,))
+            acc = self._epilogue(tp, meta, acc, weights,
+                                 i * n2, (i + 1) * n2)
+            out_tiles[(i, j)] = acc
+            if not self.overlap:
+                jax.block_until_ready(acc)
+        return self._assemble(out_tiles, nb, fo_pad // n2)
+
+    # ------------------------------------------------------------------ #
+    def _run_vector_inner(self, lp, meta, pg, h_in, weights):
+        n1, n2 = pg.config.n1, pg.config.n2
+        pair = lp.mode == 1          # CSI mode bit — the binary decides
+        ew = jnp.zeros((pg.n_edges + 1,), jnp.float32)
+        for tp in self._block_order(lp):
+            j, k, s = tp.out_j, tp.tile_k, tp.slice_id
+            t = pg.tiles[(j, k)][s]
+            cols = jnp.asarray(t.cols)
+            mask = jnp.asarray(t.edge_pos >= 0)
+            acc = jnp.zeros(cols.shape, jnp.float32)
+            for ins in tp.compute:           # SDDMM steps: args=(j,k,i,s)
+                i = ins.args[2]
+                h_dst = jax.lax.dynamic_slice(h_in, (j * n1, i * n2),
+                                              (n1, n2))
+                h_src = jax.lax.dynamic_slice(h_in, (k * n1, i * n2),
+                                              (n1, n2))
+                acc = self.ack.sddmm(h_dst, h_src, cols, mask, acc,
+                                     pair_sum=pair)
+                self.stats.tile_ops += 1
+            acc = self._epilogue(tp, meta, acc, weights, 0, n2)
+            epos = jnp.asarray(
+                np.where(t.edge_pos >= 0, t.edge_pos, pg.n_edges))
+            ew = ew.at[epos.ravel()].set(acc.ravel())
+            if not self.overlap:
+                jax.block_until_ready(ew)
+        return ew[: pg.n_edges]
+
+    # ------------------------------------------------------------------ #
+    def _run_vadd(self, lp, meta, pg, xa, xb, weights):
+        n1, n2, nb = pg.config.n1, pg.config.n2, pg.n_blocks
+        alpha, beta = meta["alpha"], meta["beta"]
+        fi_pad = max(xa.shape[1], xb.shape[1])
+        nf = fi_pad // n2
+        out_tiles: Dict[Tuple[int, int], jnp.ndarray] = {}
+        for tp in self._block_order(lp):
+            i, j = tp.out_i, tp.out_j
+            ta = jax.lax.dynamic_slice(xa, (j * n1, i * n2), (n1, n2))
+            tc = jax.lax.dynamic_slice(xb, (j * n1, i * n2), (n1, n2))
+            t = self.ack.vadd(ta, tc, alpha, beta)
+            self.stats.tile_ops += 1
+            t = self._epilogue(tp, meta, t, weights, i * n2, (i + 1) * n2)
+            out_tiles[(i, j)] = t
+            if not self.overlap:
+                jax.block_until_ready(t)
+        return self._assemble(out_tiles, nb, nf)
+
+    # ------------------------------------------------------------------ #
+    def _run_vertex_act(self, lp, meta, pg, h_in, weights):
+        n1, n2, nb = pg.config.n1, pg.config.n2, pg.n_blocks
+        fi_pad = ((max(lp.f_in, 1) + n2 - 1) // n2) * n2
+        nf = fi_pad // n2
+        out_tiles: Dict[Tuple[int, int], jnp.ndarray] = {}
+        for tp in self._block_order(lp):
+            i, j = tp.out_i, tp.out_j
+            t = jax.lax.dynamic_slice(h_in, (j * n1, i * n2), (n1, n2))
+            op = tp.compute[0]               # the ACT / AFFINE instr
+            if lp.layer_type == LayerType.BATCHNORM:
+                mu, sig, gam, bet = (
+                    np.asarray(weights[meta[k]], np.float32)
+                    for k in ("mu", "sigma", "gamma", "beta"))
+                eps = float(meta.get("eps", 1e-5))
+                sc = gam / np.sqrt(sig ** 2 + eps)
+                sh = bet - mu * sc
+                sc = np.pad(sc, (0, fi_pad - sc.shape[0]))
+                sh = np.pad(sh, (0, fi_pad - sh.shape[0]))
+                t = self.ack.affine(t, jnp.asarray(sc[i * n2:(i + 1) * n2]),
+                                    jnp.asarray(sh[i * n2:(i + 1) * n2]))
+            else:
+                t = self.ack.act(t, Activation(op.act))
+            self.stats.tile_ops += 1
+            out_tiles[(i, j)] = t
+            if not self.overlap:
+                jax.block_until_ready(t)
+        return self._assemble(out_tiles, nb, nf)
+
+    # ------------------------------------------------------------------ #
+    def _run_edge_act(self, lp, pg, ew_in):
+        """Edge activations; EDGE_SOFTMAX uses the two-pass tile scheme
+        (max/sum accumulated per destination row across a shard's tiles,
+        the Activation Unit's exp/divide applied per tile)."""
+        act = Activation(lp.mode)
+        if act != Activation.EDGE_SOFTMAX:
+            out = apply_activation(ew_in, act)
+            self.stats.tile_ops += len(lp.tiles)
+            return out
+        n1 = pg.config.n1
+        nb = pg.n_blocks
+        ew = jnp.zeros((pg.n_edges + 1,), jnp.float32)
+        for j in range(nb):
+            row_tiles = [(k, s, t) for (jj, k), ts in sorted(pg.tiles.items())
+                         if jj == j for s, t in enumerate(ts)]
+            if not row_tiles:
+                continue
+            mx = jnp.full((n1,), -3.4e38, jnp.float32)
+            for _, _, t in row_tiles:
+                mask = jnp.asarray(t.edge_pos >= 0)
+                epos = jnp.asarray(np.maximum(t.edge_pos, 0))
+                sc = jnp.where(mask, ew_in[epos], -3.4e38)
+                mx = jnp.maximum(mx, jnp.max(sc, axis=1))
+            mx = jnp.where(mx <= -3.4e38, 0.0, mx)
+            den = jnp.zeros((n1,), jnp.float32)
+            exps = []
+            for _, _, t in row_tiles:
+                mask = jnp.asarray(t.edge_pos >= 0)
+                epos = jnp.asarray(np.maximum(t.edge_pos, 0))
+                e = jnp.where(mask, jnp.exp(ew_in[epos] - mx[:, None]), 0.0)
+                den = den + jnp.sum(e, axis=1)
+                exps.append((t, mask, e))
+                self.stats.tile_ops += 1
+            den = jnp.maximum(den, 1e-12)
+            for t, mask, e in exps:
+                out_t = e / den[:, None]
+                idx = jnp.asarray(
+                    np.where(t.edge_pos >= 0, t.edge_pos, pg.n_edges))
+                ew = ew.at[idx.ravel()].set(
+                    jnp.where(mask, out_t, 0.0).ravel())
+        return ew[: pg.n_edges]

@@ -1,12 +1,12 @@
 """128-bit ISA encode/decode roundtrip + binary format (paper §5.3)."""
 import numpy as np
-import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest  # noqa: F401
+
+from _hypothesis_compat import given, settings, st  # noqa: E402
 
 from repro.core import gnn_builders as B
 from repro.core import graph as G
-from repro.core.compiler import CompileOptions, compile_model
+from repro.core.compiler import CompileOptions, run_pipeline
 from repro.core.isa import (Buf, Instr, Opcode, Region, assemble,
                             disassemble)
 from repro.core.passes.partition import PartitionConfig
@@ -48,7 +48,7 @@ def test_compiled_binary_is_wellformed():
     g = G.random_graph(1000, 5000, seed=0).gcn_normalized()
     g.feat_dim, g.n_classes = 64, 3
     m = B.build("b2", g)
-    cr = compile_model(m, g, CompileOptions(
+    cr = run_pipeline(m, g, CompileOptions(
         partition=PartitionConfig(n1=256, n2=32)))
     instrs = disassemble(cr.binary)
     assert instrs[0].op == Opcode.CSI

@@ -1,8 +1,8 @@
 """Fiber-shard partitioning invariants (paper §6.5), property-based."""
 import numpy as np
-import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest  # noqa: F401
+
+from _hypothesis_compat import given, settings, st  # noqa: E402
 
 from repro.core import graph as G
 from repro.core.passes.partition import (PartitionConfig, choose_partition,

@@ -2,9 +2,9 @@
 semantics preservation + complexity monotonicity, incl. property tests."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest  # noqa: F401
+
+from _hypothesis_compat import given, settings, st  # noqa: E402
 
 from repro.core import gnn_builders as B
 from repro.core import graph as G
