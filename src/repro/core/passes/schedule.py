@@ -6,9 +6,11 @@ block); in an SPMD software overlay the equivalent is a static balanced
 assignment computed at compile time: Longest-Processing-Time (LPT) greedy
 bin packing on the per-block cost estimate, which equalizes per-PE work the
 same way the idle-PE rule does (and is deterministic, which SPMD needs).
-The dynamic behaviour is preserved in the host serving loop
-(`runtime/serve_loop.py`) where a work queue feeds whichever PE drains
-first.
+The dynamic behaviour lives in the host serving runtime
+(``repro/runtime/serve_loop.py``): its work queue feeds whichever overlay
+drains first, and ``repro/runtime/pool.py`` reuses :func:`lpt_assign`
+below to place new cache keys on the least-loaded overlay — the idle-PE
+rule lifted to request granularity.
 
 Double-buffer overlap: within each PE stream, the MEM_RD instructions of
 tiling block t+1 may issue while block t computes (paper's
@@ -20,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import List
+from typing import List, Optional, Sequence, Tuple
 
 from .kernel_map import Program
 
@@ -34,20 +36,49 @@ class ScheduleReport:
         return max(self.per_layer_imbalance, default=1.0)
 
 
+def lpt_assign(costs: Sequence[float], n_bins: int,
+               initial_loads: Optional[Sequence[float]] = None
+               ) -> Tuple[List[int], List[float]]:
+    """Longest-Processing-Time greedy bin packing.
+
+    Items are visited in decreasing cost order; each goes to the
+    currently least-loaded bin (ties broken by lowest bin index, so the
+    assignment is deterministic).  ``initial_loads`` seeds the bins with
+    pre-existing work — the serving runtime passes each overlay's
+    outstanding load so new keys land on the idle overlay, mirroring the
+    paper's idle-PE-pulls-next-block rule.
+
+    Returns ``(assignment, loads)``: the bin index per item (input
+    order) and the final per-bin loads.
+    """
+    loads = list(initial_loads) if initial_loads is not None \
+        else [0.0] * n_bins
+    if len(loads) != n_bins:
+        raise ValueError(f"initial_loads has {len(loads)} bins, "
+                         f"expected {n_bins}")
+    heap = [(load, b) for b, load in enumerate(loads)]
+    heapq.heapify(heap)
+    assignment = [0] * len(costs)
+    order = sorted(range(len(costs)), key=lambda i: (-costs[i], i))
+    for i in order:
+        load, b = heapq.heappop(heap)
+        assignment[i] = b
+        loads[b] = load + costs[i]
+        heapq.heappush(heap, (loads[b], b))
+    return assignment, loads
+
+
 def run(prog: Program, n_pes: int = 8) -> ScheduleReport:
     """LPT-assign tiling blocks to PEs; annotate pe ids on instructions."""
     prog.n_pes = n_pes
     imbalances: List[float] = []
     for lb in prog.layer_blocks:
-        heap = [(0.0, pe) for pe in range(n_pes)]
-        heapq.heapify(heap)
-        for tb in sorted(lb.tiling_blocks, key=lambda t: -t.cost):
-            load, pe = heapq.heappop(heap)
+        tbs = lb.tiling_blocks
+        assignment, loads = lpt_assign([tb.cost for tb in tbs], n_pes)
+        for tb, pe in zip(tbs, assignment):
             tb.pe = pe
             for ins in tb.instrs:
                 ins.pe = pe
-            heapq.heappush(heap, (load + tb.cost, pe))
-        loads = sorted(l for l, _ in heap)
         mean = sum(loads) / n_pes
-        imbalances.append((loads[-1] / mean) if mean > 0 else 1.0)
+        imbalances.append((max(loads) / mean) if mean > 0 else 1.0)
     return ScheduleReport(per_layer_imbalance=imbalances)

@@ -26,7 +26,8 @@ deprecated shims over this package.
 from .cache import LRUCache
 from .decoder import ExecutionPlan, LayerPlan, TilePlan, decode_binary
 from .engine import (Engine, EngineStats, InferenceRequest,
-                     InferenceResponse, graph_signature, model_signature)
+                     InferenceResponse, graph_signature, model_signature,
+                     stack_features)
 from .executor import BinaryExecutor, ExecStats
 from .program import CompiledProgram, build_manifest, from_program
 
@@ -35,4 +36,5 @@ __all__ = [
     "CompiledProgram", "BinaryExecutor", "ExecStats", "LRUCache",
     "ExecutionPlan", "LayerPlan", "TilePlan", "decode_binary",
     "build_manifest", "from_program", "graph_signature", "model_signature",
+    "stack_features",
 ]

@@ -17,6 +17,13 @@ For serving traffic, ``engine.submit(request)`` / ``engine.serve(requests)``
 run a streaming loop with an LRU program cache keyed by (model schema
 hash, graph partition signature, geometry): repeated (model, graph)
 shapes skip software compilation and report ``T_LoC == 0``.
+``engine.submit_batch(requests)`` executes ONE binary pass for N
+requests that share a cache key (features stacked on a batch axis).
+
+One Engine is one overlay.  The traffic layer above it — dynamic
+batching, a pool of K overlays with cache-affinity routing, bounded
+work queues with backpressure, and serving telemetry — lives in
+:mod:`repro.runtime` (``OverlayPool`` / ``ServeLoop``).
 """
 from __future__ import annotations
 
@@ -24,9 +31,10 @@ import dataclasses
 import hashlib
 import time
 import warnings
-from typing import Any, Dict, Iterable, List, Optional, Union
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Union
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.compiler import CompileOptions, run_pipeline
@@ -118,6 +126,23 @@ def model_signature(model: ModelSpec, seed: int = 0) -> str:
 # --------------------------------------------------------------------------- #
 # Streaming request interface.
 # --------------------------------------------------------------------------- #
+def stack_features(features: Sequence[Any]) -> "jax.Array":
+    """Pad N ``[V, F]`` feature arrays to a common shape and stack them
+    into the ``[N, V, F]`` tensor ``run_batch`` consumes.
+
+    Requests that share a cache key come from the same deployed graph,
+    so shapes normally already agree; zero-padding is safe regardless
+    because the executor zero-pads features *and* weight rows to the
+    tile grid — extra zero columns contribute nothing.
+    """
+    arrs = [np.asarray(f, np.float32) for f in features]
+    v = max(a.shape[0] for a in arrs)
+    f = max(a.shape[1] for a in arrs)
+    arrs = [np.pad(a, ((0, v - a.shape[0]), (0, f - a.shape[1])))
+            for a in arrs]
+    return jnp.asarray(np.stack(arrs))
+
+
 @dataclasses.dataclass
 class InferenceRequest:
     """One unit of serving traffic: (model, graph, features)."""
@@ -139,6 +164,8 @@ class InferenceResponse:
     cache_key: str
     model_name: str
     graph_name: str
+    batch_size: int = 1           # requests coalesced into this binary pass
+    overlay: Optional[int] = None  # pool overlay index (set by repro.runtime)
 
 
 @dataclasses.dataclass
@@ -172,7 +199,13 @@ class Engine:
     # ------------------------------------------------------------------ #
     @property
     def exec_stats(self) -> ExecStats:
+        """Counters of the most recent ``run``/``run_batch`` only."""
         return self._executor.stats
+
+    @property
+    def exec_stats_total(self) -> ExecStats:
+        """Lifetime counters accumulated across all runs."""
+        return self._executor.total
 
     def _geometry_tag(self) -> str:
         if self.geometry is None:
@@ -231,6 +264,11 @@ class Engine:
         """Execute a compiled program by decoding its ISA binary."""
         return self._executor.run(prog, x, weights=weights)
 
+    def run_batch(self, prog: CompiledProgram, xs,
+                  weights: Optional[Dict[str, np.ndarray]] = None):
+        """One binary pass for stacked ``[N, V, F]`` features -> [N, V, C]."""
+        return self._executor.run_batch(prog, xs, weights=weights)
+
     def load(self, path: str) -> CompiledProgram:
         """Load a ``.gagi`` bundle saved by ``CompiledProgram.save``."""
         prog = CompiledProgram.load(path)
@@ -269,9 +307,72 @@ class Engine:
             cache_hit=hit, cache_key=key, model_name=prog.model_name,
             graph_name=req.graph.name)
 
+    def submit_batch(self, reqs: Sequence[InferenceRequest]
+                     ) -> List[InferenceResponse]:
+        """Serve N coalesced requests with ONE binary pass.
+
+        All requests must share this engine's cache key — same model
+        schema + weights, same deployed graph, same compile options —
+        which is exactly the grouping ``repro.runtime.Batcher`` produces.
+        Features are padded/stacked to ``[N, V, F]`` and executed by a
+        single traversal of the instruction stream (``run_batch``).
+
+        Latency accounting reflects what each request *experienced*:
+        every response reports the batch's compile latency (they all
+        waited for the one compile on a miss) and the batch's execution
+        wall time.
+        """
+        if not reqs:
+            return []
+        key = self.cache_key(reqs[0].model, reqs[0].graph,
+                             seed=reqs[0].seed)
+        for r in reqs[1:]:
+            k = self.cache_key(r.model, r.graph, seed=r.seed)
+            if k != key:
+                raise ValueError(
+                    f"submit_batch requires one cache key per batch: "
+                    f"request {r.request_id!r} has key {k[:12]}… but the "
+                    f"batch was opened with {key[:12]}…")
+        hit = key in self.cache
+        prog = self.compile(reqs[0].model, reqs[0].graph,
+                            seed=reqs[0].seed, _key=key)
+        if not hit:
+            # Execute the long-lived cached copy: the jitted batched
+            # executable is memoized on the program object, so it must
+            # attach to the instance repeat batches will see.  (On a
+            # hit, compile() already returned that instance.)
+            prog = self.cache.get(key) or prog
+        xs = stack_features([r.features for r in reqs])
+        # Bucket the batch axis to the next power of two (zero-filled
+        # lanes, outputs sliced off): deadline flushes produce ragged
+        # sizes 1..max_batch, and each DISTINCT shape would pay a fresh
+        # whole-program trace+jit — buckets cap that at log2(max_batch)
+        # executables per program for at most 2x lane waste.
+        n = len(reqs)
+        bucket = 1 << (n - 1).bit_length()
+        if bucket != n:
+            xs = jnp.pad(xs, ((0, bucket - n), (0, 0), (0, 0)))
+        t0 = time.perf_counter()
+        ys = self.run_batch(prog, xs)[:n]
+        jax.block_until_ready(ys)
+        t_loh = time.perf_counter() - t0
+        t_loc = 0.0 if hit else prog.t_loc
+
+        base = self.stats.requests
+        self.stats.requests += n
+        self.stats.cache_hits += n * int(hit)
+        self.stats.cache_misses += n * int(not hit)
+        self.stats.total_t_loh += t_loh
+        return [InferenceResponse(
+            request_id=r.request_id or f"req{base + i}", output=ys[i],
+            t_loc=t_loc, t_loh=t_loh, cache_hit=hit, cache_key=key,
+            model_name=prog.model_name, graph_name=r.graph.name,
+            batch_size=n) for i, r in enumerate(reqs)]
+
     def serve(self, requests: Iterable[InferenceRequest]
               ) -> List[InferenceResponse]:
         """Drain a request stream through :meth:`submit` (Alg. 9's
         idle-PE rule at request granularity: the queue feeds the overlay
-        whenever it drains)."""
+        whenever it drains).  For batched, multi-overlay serving use
+        :class:`repro.runtime.OverlayPool` / ``ServeLoop`` instead."""
         return [self.submit(r) for r in requests]

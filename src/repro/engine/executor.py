@@ -41,20 +41,34 @@ from .program import CompiledProgram
 class ExecStats:
     tile_ops: int = 0
     layers: int = 0
+    runs: int = 0
+
+    def add(self, other: "ExecStats") -> None:
+        self.tile_ops += other.tile_ops
+        self.layers += other.layers
+        self.runs += other.runs
 
 
 class BinaryExecutor:
-    """Executes a CompiledProgram by interpreting its decoded binary."""
+    """Executes a CompiledProgram by interpreting its decoded binary.
+
+    ``stats`` holds the counters of the most recent :meth:`run` only
+    (reset at entry); ``total`` accumulates across the executor's
+    lifetime.  A batched :meth:`run_batch` counts as ONE pass: the
+    instruction stream is traversed once, whatever the batch size.
+    """
 
     def __init__(self, backend: str = "xla", overlap: bool = True,
                  interpret: bool = True) -> None:
         self.ack = ACK(backend=backend, interpret=interpret)
         self.overlap = overlap
-        self.stats = ExecStats()
+        self.stats = ExecStats()        # per-run (last run)
+        self.total = ExecStats()        # lifetime accumulation
 
     # ------------------------------------------------------------------ #
     def run(self, prog: CompiledProgram, x: jnp.ndarray,
             weights: Optional[Dict[str, np.ndarray]] = None) -> jnp.ndarray:
+        self.stats = ExecStats(runs=1)
         plan = prog.plan()
         man = prog.manifest
         pg = prog.pgraph
@@ -117,7 +131,51 @@ class BinaryExecutor:
                 jax.block_until_ready(tree)
 
         sink = man["sink"]
+        self.total.add(self.stats)
         return vals[sink][:nv, :man["sink_f_out"]]
+
+    # ------------------------------------------------------------------ #
+    def run_batch(self, prog: CompiledProgram, xs: jnp.ndarray,
+                  weights: Optional[Dict[str, np.ndarray]] = None
+                  ) -> jnp.ndarray:
+        """Execute ONE binary pass for a stacked ``[N, V, F]`` batch.
+
+        The instruction stream is decoded and traversed once; every tile
+        op is vectorized over the leading batch axis (``jax.vmap``), so N
+        requests that share a compiled program pay the Python-side
+        dispatch cost of a single request.  Per-run ``stats`` therefore
+        report one pass worth of tile ops, matching the hardware story:
+        the overlay executes the same binary, on wider data.
+
+        The traced-and-jitted batched pass is memoized **on the
+        program** per (batch shape, executor config): steady-state
+        traffic — repeated batches of the same deployed (model, graph)
+        pair — replays a compiled whole-program executable with zero
+        Python-side instruction dispatch, which is what lets the
+        serving runtime saturate the substrate.  (A ``weights``
+        override bypasses the memo: the executable closes over the
+        program's own weights.)
+        """
+        if xs.ndim != 3:
+            raise ValueError(
+                f"run_batch expects stacked [N, V, F] features, got "
+                f"shape {tuple(xs.shape)}")
+        if weights is not None:
+            return jax.vmap(lambda x: self.run(prog, x,
+                                               weights=weights))(xs)
+        key = (tuple(xs.shape), str(xs.dtype), self.ack.backend,
+               self.ack.interpret, self.overlap)
+        cache = prog.__dict__.setdefault("_batch_exec", {})
+        entry = cache.get(key)
+        if entry is None:
+            fn = jax.jit(jax.vmap(lambda x: self.run(prog, x)))
+            y = fn(xs)      # traces now; run() sets per-run stats
+            cache[key] = (fn, dataclasses.replace(self.stats))
+            return y
+        fn, stats = entry
+        self.stats = dataclasses.replace(stats)
+        self.total.add(self.stats)
+        return fn(xs)
 
     # ------------------------------------------------------------------ #
     def _epilogue(self, tp: TilePlan, meta: dict, tile: jnp.ndarray,

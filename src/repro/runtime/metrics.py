@@ -1,0 +1,138 @@
+"""Serving telemetry for the multi-overlay runtime.
+
+One :class:`Metrics` instance aggregates everything the serving loop
+observes — per-request latency, batch occupancy, queue depth, admission
+rejections, program-cache behaviour — both globally and per cache key
+(i.e. per deployed (model, graph) pair).  ``snapshot()`` exports a plain
+JSON-serializable dict so dashboards / benchmark files can consume it
+without importing anything from this package.
+
+Latency percentiles use the nearest-rank method over the recorded
+samples; sample lists are capped (oldest dropped) so a long-lived
+serving process cannot grow without bound.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+
+def percentile(samples: List[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]) of unsorted samples."""
+    if not samples:
+        return 0.0
+    s = sorted(samples)
+    rank = max(1, math.ceil(q / 100.0 * len(s)))
+    return s[min(rank, len(s)) - 1]
+
+
+class _Series:
+    """Latency/occupancy accumulators shared by global and per-key views."""
+
+    def __init__(self, max_samples: int) -> None:
+        self.requests = 0
+        self.cache_hits = 0
+        self.batches = 0
+        self.batched_requests = 0       # sum of batch sizes
+        self.total_t_loc = 0.0
+        self.total_t_loh = 0.0
+        self.latencies: Deque[float] = deque(maxlen=max_samples)
+
+    def record(self, resp, latency_s: float) -> None:
+        self.requests += 1
+        self.cache_hits += int(resp.cache_hit)
+        self.total_t_loc += resp.t_loc
+        self.total_t_loh += resp.t_loh
+        self.latencies.append(latency_s)
+
+    def record_batch(self, size: int) -> None:
+        self.batches += 1
+        self.batched_requests += size
+
+    def snapshot(self, max_batch: Optional[int] = None) -> dict:
+        lat = list(self.latencies)
+        hit_rate = (self.cache_hits / self.requests) if self.requests else 0.0
+        mean_batch = (self.batched_requests / self.batches) \
+            if self.batches else 0.0
+        out = {
+            "requests": self.requests,
+            "cache_hit_rate": round(hit_rate, 6),
+            "p50_latency_ms": round(percentile(lat, 50) * 1e3, 6),
+            "p99_latency_ms": round(percentile(lat, 99) * 1e3, 6),
+            "batches": self.batches,
+            "mean_batch_size": round(mean_batch, 6),
+        }
+        if max_batch:
+            out["batch_occupancy"] = round(mean_batch / max_batch, 6)
+        return out
+
+
+class Metrics:
+    """Aggregates serving telemetry; see module docstring."""
+
+    def __init__(self, max_samples: int = 4096) -> None:
+        self.max_samples = max_samples
+        self._global = _Series(max_samples)
+        self._per_key: Dict[str, _Series] = {}
+        self._key_names: Dict[str, str] = {}    # key -> "model@graph" label
+        self.rejected = 0
+        self.max_queue_depth = 0
+        self._depth_sum = 0
+        self._depth_obs = 0
+        self._served = 0
+        self._serve_wall = 0.0
+
+    # ------------------------------------------------------------------ #
+    def _series(self, key: str) -> _Series:
+        if key not in self._per_key:
+            self._per_key[key] = _Series(self.max_samples)
+        return self._per_key[key]
+
+    def record_response(self, resp, latency_s: float) -> None:
+        """One completed request.  ``latency_s`` is the full experienced
+        latency (queue wait + compile + execute), measured by the loop."""
+        self._global.record(resp, latency_s)
+        self._series(resp.cache_key).record(resp, latency_s)
+        self._key_names.setdefault(
+            resp.cache_key, f"{resp.model_name}@{resp.graph_name}")
+
+    def record_batch(self, key: str, size: int) -> None:
+        self._global.record_batch(size)
+        self._series(key).record_batch(size)
+
+    def record_queue_depth(self, depth: int) -> None:
+        self.max_queue_depth = max(self.max_queue_depth, depth)
+        self._depth_sum += depth
+        self._depth_obs += 1
+
+    def record_rejection(self) -> None:
+        self.rejected += 1
+
+    def record_serve_wall(self, n_requests: int, wall_s: float) -> None:
+        """Credit a completed serve() drain toward throughput."""
+        self._served += n_requests
+        self._serve_wall += wall_s
+
+    # ------------------------------------------------------------------ #
+    @property
+    def throughput_rps(self) -> float:
+        return self._served / self._serve_wall if self._serve_wall else 0.0
+
+    def snapshot(self, max_batch: Optional[int] = None) -> dict:
+        """JSON-serializable view of everything recorded so far."""
+        g = self._global.snapshot(max_batch)
+        g.update({
+            "throughput_rps": round(self.throughput_rps, 6),
+            "rejected": self.rejected,
+            "max_queue_depth": self.max_queue_depth,
+            "mean_queue_depth": round(
+                self._depth_sum / self._depth_obs, 6)
+            if self._depth_obs else 0.0,
+        })
+        per_key = {}
+        for key, series in self._per_key.items():
+            s = series.snapshot(max_batch)
+            s["name"] = self._key_names.get(key, key[:12])
+            per_key[key] = s
+        return {"global": g, "per_key": per_key}

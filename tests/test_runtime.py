@@ -1,0 +1,297 @@
+"""repro.runtime — batching, routing, serving-loop, telemetry tests.
+
+PR 2 acceptance criteria:
+  * batched execution is numerically identical to sequential — same
+    compiled programs, ``allclose`` outputs — on two models (b1 GCN,
+    b6 GAT) over two graphs;
+  * the batcher flushes on BOTH ``max_batch`` (size) and ``max_wait_us``
+    (deadline), driven by an injected fake clock;
+  * cache-affinity routing sends a repeated key to the same overlay
+    (program-cache hit rate 1.0 after warmup);
+  * bounded-queue admission control raises ``QueueFullError``;
+  * metrics snapshots are JSON-serializable;
+  * (satellite) ``ExecStats`` reset per run instead of accumulating.
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core.passes.partition import PartitionConfig
+from repro.core.passes.schedule import lpt_assign
+from repro.engine import Engine, InferenceRequest, stack_features
+from repro.runtime import (Batch, Batcher, Metrics, OverlayPool,
+                           QueueFullError, ServeLoop, warm_pool)
+
+GEOM = PartitionConfig(n1=32, n2=8)
+
+
+def _g(nv=70, ne=260, f=8, c=3, seed=0):
+    g = G.random_graph(nv, ne, seed=seed).gcn_normalized()
+    g.feat_dim, g.n_classes = f, c
+    return g
+
+
+def _pool(n=2, **kw) -> OverlayPool:
+    return OverlayPool(n_overlays=n, geometry=GEOM, n_pes=4, **kw)
+
+
+def _req(model, g, seed, rid=None):
+    x = jnp.asarray(G.random_features(g, seed=seed))
+    return InferenceRequest(model=model, graph=g, features=x,
+                            request_id=rid)
+
+
+class FakeClock:
+    def __init__(self) -> None:
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+# --------------------------------------------------------------------------- #
+# Batched == sequential (the tentpole's correctness contract).
+# --------------------------------------------------------------------------- #
+def test_batched_equals_sequential_two_models_two_graphs():
+    """b1 (GCN) + b6 (GAT) over two graphs: OverlayPool.serve with
+    batching produces the same outputs as one-at-a-time Engine.serve,
+    including across the jitted-executable replay path (3 rounds)."""
+    g1, g2 = _g(seed=21), _g(nv=80, ne=300, seed=22)
+    reqs = []
+    for rnd in range(3):
+        for m, g in [("b1", g1), ("b6", g2), ("b1", g2), ("b6", g1)]:
+            reqs.append(_req(m, g, seed=len(reqs),
+                             rid=f"req{len(reqs)}"))
+
+    pool = _pool(2)
+    batched = pool.serve(reqs, max_batch=3, max_wait_us=1e9,
+                         overlap_overlays=False)
+    sequential = Engine(geometry=GEOM, n_pes=4).serve(reqs)
+
+    assert [r.request_id for r in batched] == \
+        [r.request_id for r in sequential]
+    for b, s in zip(batched, sequential):
+        np.testing.assert_allclose(np.asarray(b.output),
+                                   np.asarray(s.output),
+                                   rtol=1e-5, atol=1e-5)
+        assert b.batch_size == 3 and s.batch_size == 1
+        assert b.overlay in (0, 1)
+
+
+def test_engine_submit_batch_one_pass_and_rejects_mixed_keys():
+    g = _g(seed=5)
+    eng = Engine(geometry=GEOM, n_pes=4)
+    reqs = [_req("b1", g, seed=i) for i in range(4)]
+    resps = eng.submit_batch(reqs)
+    assert [r.batch_size for r in resps] == [4] * 4
+    # one binary pass: per-run stats count a single traversal
+    single = Engine(geometry=GEOM, n_pes=4)
+    single.submit(reqs[0])
+    assert eng.exec_stats.tile_ops == single.exec_stats.tile_ops
+    assert eng.exec_stats.runs == 1
+    # mixed cache keys in one batch are a caller bug
+    other = _g(nv=60, ne=200, seed=6)
+    with pytest.raises(ValueError, match="one cache key"):
+        eng.submit_batch([_req("b1", g, 0), _req("b1", other, 0)])
+
+
+def test_stack_features_pads_and_stacks():
+    xs = stack_features([np.ones((3, 2)), np.ones((2, 4))])
+    assert xs.shape == (2, 3, 4)
+    assert float(xs[1, 2, 0]) == 0.0       # padded rows are zero
+    assert float(xs[0, 0, 3]) == 0.0       # padded cols are zero
+
+
+# --------------------------------------------------------------------------- #
+# Batcher flush policies (fake-clock driven).
+# --------------------------------------------------------------------------- #
+def test_batcher_flushes_on_max_batch():
+    clock = FakeClock()
+    b = Batcher(max_batch=3, max_wait_us=1e9, clock=clock)
+    g = _g()
+    assert b.add("k", _req("b1", g, 0), 0) is None
+    assert b.add("k", _req("b1", g, 1), 1) is None
+    full = b.add("k", _req("b1", g, 2), 2)     # size flush, no time passed
+    assert full is not None and len(full) == 3
+    assert full.indices == [0, 1, 2]
+    assert b.depth == 0
+
+
+def test_batcher_flushes_on_max_wait_us():
+    clock = FakeClock()
+    b = Batcher(max_batch=100, max_wait_us=2000.0, clock=clock)
+    g = _g()
+    b.add("k", _req("b1", g, 0), 0)
+    clock.advance(0.0015)                      # 1.5 ms < 2 ms deadline
+    assert b.due() == []
+    b.add("k2", _req("b7", g, 1), 1)           # younger group
+    clock.advance(0.0010)                      # "k" now 2.5 ms old
+    due = b.due()
+    assert [x.key for x in due] == ["k"]       # k2 (1 ms old) stays
+    assert b.depth == 1
+    clock.advance(0.0015)
+    assert [x.key for x in b.due()] == ["k2"]
+
+
+def test_batcher_flush_all_first_arrival_order():
+    b = Batcher(max_batch=10, max_wait_us=1e9, clock=FakeClock())
+    g = _g()
+    for i, key in enumerate(["kb", "ka", "kb", "kc"]):
+        b.add(key, _req("b1", g, i), i)
+    assert [x.key for x in b.flush_all()] == ["kb", "ka", "kc"]
+    assert b.depth == 0
+
+
+# --------------------------------------------------------------------------- #
+# Cache-affinity routing.
+# --------------------------------------------------------------------------- #
+def test_repeated_key_routes_to_same_overlay_hit_rate_one():
+    g1, g2 = _g(seed=31), _g(nv=80, ne=300, seed=32)
+    pool = _pool(2)
+    warmup = [_req("b1", g1, 0), _req("b6", g2, 1)]
+    warm_pool(pool, warmup)
+    assert pool.cache_hit_rate == 0.0          # warmup compiled cold
+
+    # 4 post-warmup batches per key; every one must go to the key's
+    # home overlay and hit its program cache
+    reqs = []
+    for rnd in range(4):
+        reqs += [_req("b1", g1, 100 + rnd), _req("b1", g1, 200 + rnd),
+                 _req("b6", g2, 300 + rnd), _req("b6", g2, 400 + rnd)]
+    resps = pool.serve(reqs, max_batch=2, max_wait_us=1e9,
+                       overlap_overlays=False)
+    assert all(r.cache_hit for r in resps)     # hit rate 1.0 after warmup
+    by_key = {}
+    for r in resps:
+        by_key.setdefault(r.cache_key, set()).add(r.overlay)
+        assert r.t_loc == 0.0
+    assert all(len(ovs) == 1 for ovs in by_key.values())
+    # the two keys landed on different overlays (LPT spread them)
+    assert len(set.union(*by_key.values())) == 2
+    snap = pool.metrics.snapshot(max_batch=2)
+    assert snap["global"]["cache_hit_rate"] == 1.0
+
+
+def test_new_keys_lpt_balance_across_overlays():
+    pool = _pool(3)
+    batches = [Batch(key=f"k{i}", requests=[], indices=[],
+                     created_at=0.0, cost=c)
+               for i, c in enumerate([5.0, 3.0, 2.0, 2.0])]
+    placed = pool.place(batches)
+    # LPT: 5 -> ov0, 3 -> ov1, 2 -> ov2, 2 -> ov2 ... loads (5, 3, 4)
+    assert placed == [0, 1, 2, 2]
+    assert pool.loads == [5.0, 3.0, 4.0]
+    # affinity is sticky: same key re-routes home regardless of load
+    assert pool.route("k0", cost=1.0) == 0
+
+
+def test_lpt_assign_balances_and_respects_initial_loads():
+    assignment, loads = lpt_assign([4.0, 3.0, 2.0, 1.0], 2)
+    assert max(loads) == 5.0                   # {4,1} vs {3,2}
+    assignment, loads = lpt_assign([1.0], 2, initial_loads=[10.0, 0.0])
+    assert assignment == [1]
+    with pytest.raises(ValueError):
+        lpt_assign([1.0], 3, initial_loads=[0.0])
+
+
+def test_pool_rejects_mismatched_geometries():
+    e1 = Engine(geometry=PartitionConfig(n1=32, n2=8))
+    e2 = Engine(geometry=PartitionConfig(n1=64, n2=8))
+    with pytest.raises(ValueError, match="geometry"):
+        OverlayPool(engines=[e1, e2])
+
+
+# --------------------------------------------------------------------------- #
+# Serving loop: admission control, deadlines, deterministic drain.
+# --------------------------------------------------------------------------- #
+def test_admission_control_raises_queue_full():
+    clock = FakeClock()
+    pool = _pool(1)
+    loop = ServeLoop(pool, max_batch=100, max_wait_us=1e9, max_queue=3,
+                     clock=clock, overlap_overlays=False)
+    g = _g()
+    for i in range(3):
+        loop.submit(_req("b1", g, i))
+    with pytest.raises(QueueFullError):
+        loop.submit(_req("b1", g, 99))
+    assert pool.metrics.rejected == 1
+    resps = loop.drain()                       # backpressure release
+    assert len(resps) == 3 and loop.queue_depth == 0
+    loop.submit(_req("b1", g, 99))             # queue has room again
+    assert len(loop.drain()) == 1
+
+
+def test_offline_serve_backpressure_rejects_nothing():
+    """serve() exerts backpressure on a full queue (flush + continue);
+    no request is dropped and none is counted as rejected."""
+    g = _g()
+    pool = _pool(1)
+    reqs = [_req("b1", g, i, rid=f"r{i}") for i in range(9)]
+    resps = pool.serve(reqs, max_batch=4, max_wait_us=1e9, max_queue=3,
+                       overlap_overlays=False)
+    assert [r.request_id for r in resps] == [f"r{i}" for i in range(9)]
+    assert pool.metrics.rejected == 0
+    assert pool.metrics.snapshot()["global"]["requests"] == 9
+
+
+def test_serve_loop_deadline_flush_with_fake_clock():
+    clock = FakeClock()
+    pool = _pool(1)
+    loop = ServeLoop(pool, max_batch=100, max_wait_us=5000.0,
+                     max_queue=64, clock=clock, overlap_overlays=False)
+    g = _g()
+    loop.submit(_req("b1", g, 0))
+    loop.poll()
+    assert loop.queue_depth == 1               # deadline not reached
+    clock.advance(0.006)                       # 6 ms > 5 ms
+    loop.poll()
+    assert loop.queue_depth == 0               # deadline flush dispatched
+    r, = loop.drain()
+    assert r.batch_size == 1
+
+
+def test_serve_returns_request_order_and_json_metrics():
+    g1, g2 = _g(seed=41), _g(nv=80, ne=300, seed=42)
+    pool = _pool(2)
+    reqs = [_req(m, g, seed=i, rid=f"r{i}") for i, (m, g) in enumerate(
+        [("b1", g1), ("b6", g2), ("b1", g1), ("b6", g2),
+         ("b1", g1), ("b6", g2)])]
+    resps = pool.serve(reqs, max_batch=2, max_wait_us=1e9)  # threaded path
+    assert [r.request_id for r in resps] == [f"r{i}" for i in range(6)]
+
+    snap = pool.metrics.snapshot(max_batch=2)
+    blob = json.loads(json.dumps(snap))        # JSON round-trip
+    assert blob["global"]["requests"] == 6
+    # per key: one full batch of 2 + one singleton flushed at drain
+    assert blob["global"]["batches"] == 4
+    assert blob["global"]["mean_batch_size"] == 1.5
+    assert blob["global"]["batch_occupancy"] == 0.75
+    assert set(blob["per_key"]) == {r.cache_key for r in resps}
+    json.dumps(pool.stats_snapshot())          # also JSON-clean
+
+
+# --------------------------------------------------------------------------- #
+# Satellite: ExecStats reset per run (no cross-run accumulation).
+# --------------------------------------------------------------------------- #
+def test_exec_stats_reset_per_run_and_accumulate_in_total():
+    g = _g(seed=51)
+    eng = Engine(geometry=GEOM, n_pes=4)
+    prog = eng.compile("b1", g)
+    x = jnp.asarray(G.random_features(g, seed=0))
+
+    eng.run(prog, x)
+    first = eng.exec_stats
+    assert first.runs == 1 and first.tile_ops > 0
+    eng.run(prog, x)
+    second = eng.exec_stats
+    # per-run stats do NOT include the previous run
+    assert (second.tile_ops, second.layers, second.runs) == \
+        (first.tile_ops, first.layers, 1)
+    assert eng.exec_stats_total.runs == 2
+    assert eng.exec_stats_total.tile_ops == 2 * first.tile_ops
