@@ -31,6 +31,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax.numpy as jnp  # noqa: E402
 
+try:                                    # script: python benchmarks/bench_serve.py
+    from common import provenance
+except ImportError:                     # module: python -m benchmarks.bench_serve
+    from benchmarks.common import provenance
+
 from repro.core import graph as G  # noqa: E402
 from repro.core.passes.partition import PartitionConfig  # noqa: E402
 from repro.engine import Engine, InferenceRequest  # noqa: E402
@@ -40,26 +45,27 @@ from repro.runtime.metrics import percentile  # noqa: E402
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def make_graphs(smoke: bool):
+def make_graphs(smoke: bool, seed: int):
     if smoke:
-        ga = G.random_graph(120, 480, seed=11).gcn_normalized()
-        gb = G.random_graph(150, 600, seed=12).gcn_normalized()
+        ga = G.random_graph(120, 480, seed=11 + seed).gcn_normalized()
+        gb = G.random_graph(150, 600, seed=12 + seed).gcn_normalized()
         ga.feat_dim, ga.n_classes = 16, 4
         gb.feat_dim, gb.n_classes = 16, 4
         ga.name, gb.name = "SA", "SB"
     else:
-        ga = G.synthesize("CI", seed=0).gcn_normalized()
-        gb = G.synthesize("CO", seed=0).gcn_normalized()
+        ga = G.synthesize("CI", seed=seed).gcn_normalized()
+        gb = G.synthesize("CO", seed=seed).gcn_normalized()
     return ga, gb
 
 
-def make_traffic(shape: str, n: int, ga, gb) -> List[InferenceRequest]:
+def make_traffic(shape: str, n: int, ga, gb,
+                 seed: int) -> List[InferenceRequest]:
     pairs = [("b1", ga)] if shape == "same_key" else \
         [("b1", ga), ("b6", gb), ("b7", ga), ("b3", gb)]
     reqs = []
     for i in range(n):
         m, g = pairs[i % len(pairs)]
-        x = jnp.asarray(G.random_features(g, seed=1000 + i))
+        x = jnp.asarray(G.random_features(g, seed=1000 + seed + i))
         reqs.append(InferenceRequest(model=m, graph=g, features=x,
                                      request_id=f"{shape}{i}"))
     return reqs
@@ -113,22 +119,23 @@ def bench_batched(geom, reqs, n_pes: int, n_overlays: int,
 
 
 def run(smoke: bool, n_requests: int, n_overlays: int, max_batch: int,
-        out_path: str) -> dict:
+        out_path: str, seed: int = 0) -> dict:
     geom = PartitionConfig(n1=32, n2=8) if smoke \
         else PartitionConfig(n1=256, n2=32)
     n_pes = 4 if smoke else 8
-    ga, gb = make_graphs(smoke)
+    ga, gb = make_graphs(smoke, seed)
     report: dict = {
         "benchmark": "bench_serve",
         "mode": "smoke" if smoke else "full",
         "requests_per_shape": n_requests,
         "overlays": n_overlays,
         "max_batch": max_batch,
+        "provenance": provenance(seed),
         "traffic": {},
     }
     print("shape,path,wall_s,throughput_rps,p50_ms,p99_ms")
     for shape in ("same_key", "mixed"):
-        reqs = make_traffic(shape, n_requests, ga, gb)
+        reqs = make_traffic(shape, n_requests, ga, gb, seed)
         seq = bench_sequential(geom, reqs, n_pes)
         bat = bench_batched(geom, reqs, n_pes, n_overlays, max_batch)
         speedup = bat["throughput_rps"] / seq["throughput_rps"] \
@@ -155,12 +162,16 @@ def main() -> None:
                     help="requests per traffic shape")
     ap.add_argument("--overlays", type=int, default=2)
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="offsets graph/feature seeds; recorded in the "
+                         "report provenance")
     ap.add_argument("--out", default=os.path.join(ROOT,
                                                   "BENCH_serve.json"))
     args = ap.parse_args()
     n = args.requests if args.requests is not None \
         else (16 if args.smoke else 64)
-    run(args.smoke, n, args.overlays, args.max_batch, args.out)
+    run(args.smoke, n, args.overlays, args.max_batch, args.out,
+        seed=args.seed)
 
 
 if __name__ == "__main__":

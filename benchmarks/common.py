@@ -78,3 +78,15 @@ def run_model(bname: str, g: "G.Graph", x, engine: Engine,
 def emit(rows: List[str]) -> None:
     for r in rows:
         print(r, flush=True)
+
+
+def provenance(seed: int) -> Dict[str, object]:
+    """Run context embedded in every BENCH_*.json so run-to-run variance
+    (noisy CI hosts, backend differences) is attributable."""
+    return {
+        "seed": seed,
+        "jax_backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "cpu_count": os.cpu_count(),
+        "platform": sys.platform,
+    }

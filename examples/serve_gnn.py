@@ -110,7 +110,7 @@ def main() -> None:
           f"{g['cache_hit_rate']:.0%}")
     print("per-overlay:", json.dumps(pool.stats_snapshot()["overlays"],
                                      indent=1))
-    n_kernels = len(ack.compile_counter)
+    n_kernels = len(ack.counter_snapshot())
     print(f"distinct tile kernels compiled across ALL requests: "
           f"{n_kernels} (bounded by tile geometry, not by #models, "
           f"#graphs or batch size — the overlay property)")

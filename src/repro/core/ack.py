@@ -19,6 +19,7 @@ the cache behaviour to the tests/benchmarks.
 from __future__ import annotations
 
 import functools
+import threading
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -27,11 +28,29 @@ import jax.numpy as jnp
 from .ir import Activation
 from .reference import apply_activation
 
+# Tile-shape-keyed kernel instantiation counts.  The runtime's per-overlay
+# worker threads all funnel through _count, so every mutation (and the
+# reset) holds _counter_lock; readers that only iterate a snapshot should
+# call ``counter_snapshot``.
 compile_counter: Dict[Tuple, int] = {}
+_counter_lock = threading.Lock()
 
 
 def _count(key: Tuple) -> None:
-    compile_counter[key] = compile_counter.get(key, 0) + 1
+    with _counter_lock:
+        compile_counter[key] = compile_counter.get(key, 0) + 1
+
+
+def reset_counter() -> None:
+    """Clear the kernel-instantiation counter (tests/benchmarks)."""
+    with _counter_lock:
+        compile_counter.clear()
+
+
+def counter_snapshot() -> Dict[Tuple, int]:
+    """Consistent copy of the counter, safe to iterate while serving."""
+    with _counter_lock:
+        return dict(compile_counter)
 
 
 # --------------------------------------------------------------------------- #

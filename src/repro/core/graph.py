@@ -88,6 +88,18 @@ class Graph:
             weight=self.weight[order],
         )
 
+    def in_csr(self):
+        """Cached in-adjacency CSR view (``repro.sampling.csr.CSR``).
+
+        The per-user sampling layer needs O(degree) "who sends messages
+        to vertex v" lookups on the host; this hook memoizes the one-time
+        O(|V| + |E|) CSR build on the graph object (same identity-keyed
+        invalidation rule as the engine's signature memo: rebinding the
+        edge arrays invalidates, in-place mutation is unsupported).
+        """
+        from repro.sampling.csr import in_csr  # lazy: core has no other
+        return in_csr(self)                    # dependency on sampling
+
 
 # --------------------------------------------------------------------------- #
 def synthesize(
@@ -111,13 +123,22 @@ def synthesize(
 
 
 def random_graph(
-    n_vertices: int, n_edges: int, seed: int = 0, degree: str = "uniform"
+    n_vertices: int, n_edges: int, seed: int = 0, degree: str = "uniform",
+    alpha: float = 1.1, dedupe: bool = False,
 ) -> Graph:
+    """Random COO graph.
+
+    ``alpha`` is the power-law exponent of the Zipf-ish endpoint sampling
+    (``degree="powerlaw"``; higher = heavier hubs).  With ``dedupe=True``
+    duplicate (src, dst) draws are folded into a single edge whose weight
+    counts the multiplicity — the realistic shape for sampled/benchmark
+    traffic, where multi-edges are measurement artifacts.
+    """
     rng = np.random.default_rng(seed)
     if degree == "powerlaw":
         # Zipf-ish endpoint sampling, truncated to |V|.
         ranks = np.arange(1, n_vertices + 1, dtype=np.float64)
-        p = ranks ** -1.1
+        p = ranks ** -alpha
         p /= p.sum()
         dst = rng.choice(n_vertices, size=n_edges, p=p).astype(np.int32)
         src = rng.choice(n_vertices, size=n_edges, p=p).astype(np.int32)
@@ -125,6 +146,13 @@ def random_graph(
         src = rng.integers(0, n_vertices, n_edges, dtype=np.int32)
         dst = rng.integers(0, n_vertices, n_edges, dtype=np.int32)
     w = np.ones(n_edges, np.float32)
+    if dedupe:
+        key = src.astype(np.int64) * n_vertices + dst
+        uniq, inv = np.unique(key, return_inverse=True)
+        mult = np.bincount(inv, minlength=uniq.shape[0])
+        src = (uniq // n_vertices).astype(np.int32)
+        dst = (uniq % n_vertices).astype(np.int32)
+        w = mult.astype(np.float32)
     return Graph(n_vertices=n_vertices, src=src, dst=dst, weight=w)
 
 

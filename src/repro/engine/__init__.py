@@ -27,7 +27,7 @@ from .cache import LRUCache
 from .decoder import ExecutionPlan, LayerPlan, TilePlan, decode_binary
 from .engine import (Engine, EngineStats, InferenceRequest,
                      InferenceResponse, graph_signature, model_signature,
-                     stack_features)
+                     stack_features, stack_graph_data)
 from .executor import BinaryExecutor, ExecStats
 from .program import CompiledProgram, build_manifest, from_program
 
@@ -36,5 +36,5 @@ __all__ = [
     "CompiledProgram", "BinaryExecutor", "ExecStats", "LRUCache",
     "ExecutionPlan", "LayerPlan", "TilePlan", "decode_binary",
     "build_manifest", "from_program", "graph_signature", "model_signature",
-    "stack_features",
+    "stack_features", "stack_graph_data",
 ]

@@ -143,15 +143,39 @@ def stack_features(features: Sequence[Any]) -> "jax.Array":
     return jnp.asarray(np.stack(arrs))
 
 
+def stack_graph_data(gds: Sequence[dict], pad_to: int) -> dict:
+    """Stack N per-request ``graph_data`` pytrees (identical structure —
+    one geometry bucket) into a leading batch axis, zero-filling up to
+    ``pad_to`` lanes.  Zero lanes are inert: mask False everywhere, so
+    padded lanes compute on empty graphs and their outputs are sliced
+    off with the feature padding."""
+    stacked = jax.tree_util.tree_map(
+        lambda *a: jnp.stack([jnp.asarray(x) for x in a]), *gds)
+    extra = pad_to - len(gds)
+    if extra > 0:
+        stacked = jax.tree_util.tree_map(
+            lambda a: jnp.pad(a, ((0, extra),) + ((0, 0),) * (a.ndim - 1)),
+            stacked)
+    return stacked
+
+
 @dataclasses.dataclass
 class InferenceRequest:
-    """One unit of serving traffic: (model, graph, features)."""
+    """One unit of serving traffic: (model, graph, features).
+
+    ``graph_data`` switches the request to graph-as-data execution (the
+    mini-batch sampling layer): ``graph`` is then a geometry-bucket
+    *template* shared by every request in the bucket — making the
+    program-cache key collide across users — and the request's actual
+    topology travels in ``graph_data`` (canonical ELL layout, see
+    ``repro.sampling.buckets.layout_graph``)."""
 
     model: ModelSpec              # benchmark name ("b1".."b8") or a ModelIR
     graph: Graph
     features: Any                 # [V, F] array
     request_id: Optional[str] = None
     seed: int = 0                 # builder seed when model is a name
+    graph_data: Optional[dict] = None
 
 
 @dataclasses.dataclass
@@ -260,14 +284,20 @@ class Engine:
         return prog
 
     def run(self, prog: CompiledProgram, x,
-            weights: Optional[Dict[str, np.ndarray]] = None):
+            weights: Optional[Dict[str, np.ndarray]] = None,
+            graph_data: Optional[dict] = None):
         """Execute a compiled program by decoding its ISA binary."""
-        return self._executor.run(prog, x, weights=weights)
+        return self._executor.run(prog, x, weights=weights,
+                                  graph_data=graph_data)
 
     def run_batch(self, prog: CompiledProgram, xs,
-                  weights: Optional[Dict[str, np.ndarray]] = None):
-        """One binary pass for stacked ``[N, V, F]`` features -> [N, V, C]."""
-        return self._executor.run_batch(prog, xs, weights=weights)
+                  weights: Optional[Dict[str, np.ndarray]] = None,
+                  graph_data: Optional[dict] = None):
+        """One binary pass for stacked ``[N, V, F]`` features -> [N, V, C].
+        ``graph_data`` (stacked, leading batch axis) lets each lane carry
+        its own topology over the same compiled program."""
+        return self._executor.run_batch(prog, xs, weights=weights,
+                                        graph_data=graph_data)
 
     def load(self, path: str) -> CompiledProgram:
         """Load a ``.gagi`` bundle saved by ``CompiledProgram.save``."""
@@ -292,7 +322,7 @@ class Engine:
         hit = key in self.cache
         prog = self.compile(req.model, req.graph, seed=req.seed, _key=key)
         t0 = time.perf_counter()
-        y = self.run(prog, req.features)
+        y = self.run(prog, req.features, graph_data=req.graph_data)
         jax.block_until_ready(y)
         t_loh = time.perf_counter() - t0
         t_loc = 0.0 if hit else prog.t_loc
@@ -333,6 +363,11 @@ class Engine:
                     f"submit_batch requires one cache key per batch: "
                     f"request {r.request_id!r} has key {k[:12]}… but the "
                     f"batch was opened with {key[:12]}…")
+        with_gd = sum(r.graph_data is not None for r in reqs)
+        if 0 < with_gd < len(reqs):
+            raise ValueError(
+                "submit_batch cannot mix graph-as-data requests with "
+                "baked-topology requests in one batch")
         hit = key in self.cache
         prog = self.compile(reqs[0].model, reqs[0].graph,
                             seed=reqs[0].seed, _key=key)
@@ -352,8 +387,10 @@ class Engine:
         bucket = 1 << (n - 1).bit_length()
         if bucket != n:
             xs = jnp.pad(xs, ((0, bucket - n), (0, 0), (0, 0)))
+        gd = stack_graph_data([r.graph_data for r in reqs], bucket) \
+            if with_gd else None
         t0 = time.perf_counter()
-        ys = self.run_batch(prog, xs)[:n]
+        ys = self.run_batch(prog, xs, graph_data=gd)[:n]
         jax.block_until_ready(ys)
         t_loh = time.perf_counter() - t0
         t_loc = 0.0 if hit else prog.t_loc

@@ -19,6 +19,22 @@ PE-interleaved order (round-robin across the PE streams the scheduler
 encoded into the instructions).  ``overlap=True`` dispatches tile ops
 asynchronously (the double-buffering analogue); ``overlap=False`` forces
 every tiling block to completion (Fig. 16 ablation baseline).
+
+Graph-as-data mode: ``run``/``run_batch`` accept an optional
+``graph_data`` structure that *replaces the program's baked ELL tiles at
+runtime* — the Dynasparse-style normalization the sampling layer uses.
+The program is compiled once per geometry bucket (against the bucket's
+canonical template, ``repro.sampling.buckets``), and each request ships
+its actual topology as arrays matching the canonical layout::
+
+    {"tiles": {"j:k:s": {"cols": int32 [n1, w], "vals": float32 [n1, w],
+                         "mask": bool  [n1, w], "epos": int32  [n1, w]}},
+     "inv_in_degree": float32 [nb * n1]}
+
+``epos`` uses the same convention as the baked tiles (original COO edge
+index, ``-1`` on pad slots).  In ``run_batch`` the structure is stacked
+with a leading batch axis and vmapped together with the features, so N
+*different* subgraphs sharing one bucket execute as ONE binary pass.
 """
 from __future__ import annotations
 
@@ -35,6 +51,20 @@ from repro.core.reference import apply_activation
 
 from .decoder import LayerPlan, TilePlan
 from .program import CompiledProgram
+
+
+def _tile_arrays(pg, gtiles, j: int, k: int, s: int):
+    """(cols, vals, mask, epos) of tile (j, k, s) — from the runtime
+    ``graph_data`` when present, else from the program's baked tiles.
+    Shapes agree by the canonical-layout contract, so the same traced
+    computation serves both sources.  Baked arrays stay on the host
+    (numpy) — consumers device-convert implicitly on use, so unused
+    elements cost nothing on the eager path."""
+    if gtiles is None:
+        t = pg.tiles[(j, k)][s]
+        return t.cols, t.vals, t.edge_pos >= 0, t.edge_pos
+    d = gtiles[f"{j}:{k}:{s}"]
+    return d["cols"], d["vals"], d["mask"], d["epos"]
 
 
 @dataclasses.dataclass
@@ -67,11 +97,13 @@ class BinaryExecutor:
 
     # ------------------------------------------------------------------ #
     def run(self, prog: CompiledProgram, x: jnp.ndarray,
-            weights: Optional[Dict[str, np.ndarray]] = None) -> jnp.ndarray:
+            weights: Optional[Dict[str, np.ndarray]] = None,
+            graph_data: Optional[dict] = None) -> jnp.ndarray:
         self.stats = ExecStats(runs=1)
         plan = prog.plan()
         man = prog.manifest
         pg = prog.pgraph
+        gtiles = graph_data["tiles"] if graph_data is not None else None
         weights = weights if weights is not None else prog.weights
         lmeta = man["layers"]
         n1, n2, nb = pg.config.n1, pg.config.n2, pg.n_blocks
@@ -91,7 +123,9 @@ class BinaryExecutor:
                                   ((x.shape[1] + n2 - 1) // n2) * n2))
         vals: Dict[int, jnp.ndarray] = {}       # layer -> padded output
         edge_vals: Dict[int, jnp.ndarray] = {}  # layer -> (E,) edge scores
-        inv_deg = jnp.asarray(pg.inv_in_degree)
+        inv_deg = jnp.asarray(graph_data["inv_in_degree"]
+                              if graph_data is not None
+                              else pg.inv_in_degree)
 
         for lp in plan.layers:
             meta = lmeta[str(lp.layer_id)]
@@ -104,13 +138,14 @@ class BinaryExecutor:
 
             if lt == LayerType.AGGREGATE:
                 vals[lp.layer_id] = self._run_aggregate(
-                    lp, meta, pg, h_in, edge_vals, inv_deg, weights)
+                    lp, meta, pg, h_in, edge_vals, inv_deg, weights,
+                    gtiles)
             elif lt == LayerType.LINEAR:
                 vals[lp.layer_id] = self._run_linear(
                     lp, meta, pg, h_in, weights)
             elif lt == LayerType.VECTOR_INNER:
                 edge_vals[lp.layer_id] = self._run_vector_inner(
-                    lp, meta, pg, h_in, weights)
+                    lp, meta, pg, h_in, weights, gtiles)
             elif lt == LayerType.VECTOR_ADD:
                 a_id, b_id = meta["operands"]
                 xa = x_pad if a_id == -1 else vals[a_id]
@@ -120,7 +155,8 @@ class BinaryExecutor:
             elif lt in (LayerType.ACTIVATION, LayerType.BATCHNORM):
                 if lp.on_edges:
                     src = edge_vals[feat_parents[0]]
-                    edge_vals[lp.layer_id] = self._run_edge_act(lp, pg, src)
+                    edge_vals[lp.layer_id] = self._run_edge_act(
+                        lp, pg, src, gtiles)
                 else:
                     vals[lp.layer_id] = self._run_vertex_act(
                         lp, meta, pg, h_in, weights)
@@ -136,8 +172,8 @@ class BinaryExecutor:
 
     # ------------------------------------------------------------------ #
     def run_batch(self, prog: CompiledProgram, xs: jnp.ndarray,
-                  weights: Optional[Dict[str, np.ndarray]] = None
-                  ) -> jnp.ndarray:
+                  weights: Optional[Dict[str, np.ndarray]] = None,
+                  graph_data: Optional[dict] = None) -> jnp.ndarray:
         """Execute ONE binary pass for a stacked ``[N, V, F]`` batch.
 
         The instruction stream is decoded and traversed once; every tile
@@ -161,21 +197,32 @@ class BinaryExecutor:
                 f"run_batch expects stacked [N, V, F] features, got "
                 f"shape {tuple(xs.shape)}")
         if weights is not None:
+            if graph_data is not None:
+                return jax.vmap(lambda x, gd: self.run(
+                    prog, x, weights=weights, graph_data=gd)
+                )(xs, graph_data)
             return jax.vmap(lambda x: self.run(prog, x,
                                                weights=weights))(xs)
-        key = (tuple(xs.shape), str(xs.dtype), self.ack.backend,
-               self.ack.interpret, self.overlap)
+        # graph_data shapes are fixed by the program's canonical layout,
+        # so (batch shape, presence flag) fully keys the executable.
+        key = (tuple(xs.shape), str(xs.dtype), graph_data is not None,
+               self.ack.backend, self.ack.interpret, self.overlap)
         cache = prog.__dict__.setdefault("_batch_exec", {})
         entry = cache.get(key)
         if entry is None:
-            fn = jax.jit(jax.vmap(lambda x: self.run(prog, x)))
-            y = fn(xs)      # traces now; run() sets per-run stats
+            if graph_data is not None:
+                fn = jax.jit(jax.vmap(
+                    lambda x, gd: self.run(prog, x, graph_data=gd)))
+                y = fn(xs, graph_data)  # traces now; run() sets stats
+            else:
+                fn = jax.jit(jax.vmap(lambda x: self.run(prog, x)))
+                y = fn(xs)
             cache[key] = (fn, dataclasses.replace(self.stats))
             return y
         fn, stats = entry
         self.stats = dataclasses.replace(stats)
         self.total.add(self.stats)
-        return fn(xs)
+        return fn(xs, graph_data) if graph_data is not None else fn(xs)
 
     # ------------------------------------------------------------------ #
     def _epilogue(self, tp: TilePlan, meta: dict, tile: jnp.ndarray,
@@ -219,7 +266,7 @@ class BinaryExecutor:
 
     # ------------------------------------------------------------------ #
     def _run_aggregate(self, lp, meta, pg, h_in, edge_vals, inv_deg,
-                       weights) -> jnp.ndarray:
+                       weights, gtiles=None) -> jnp.ndarray:
         n1, n2, nb = pg.config.n1, pg.config.n2, pg.n_blocks
         nf = ((max(lp.f_in, 1) + n2 - 1) // n2)
         op = {AggOp.SUM: "sum", AggOp.MEAN: "mean",
@@ -237,16 +284,11 @@ class BinaryExecutor:
             for ins in tp.compute:           # SPDMM steps, stream order
                 jj, k, ii = ins.args[0], ins.args[1], ins.args[2]
                 s, dyn = ins.args[3] >> 1, ins.args[3] & 1
-                t = pg.tiles[(jj, k)][s]
                 h_tile = jax.lax.dynamic_slice(
                     h_in, (k * n1, ii * n2), (n1, n2))
-                cols = jnp.asarray(t.cols)
-                mask = jnp.asarray(t.edge_pos >= 0)
-                if not dyn:
-                    v = jnp.asarray(t.vals)
-                else:
-                    epos = jnp.asarray(np.maximum(t.edge_pos, 0))
-                    v = jnp.where(mask, ew[epos], 0.0)
+                cols, v, mask, epos = _tile_arrays(pg, gtiles, jj, k, s)
+                if dyn:
+                    v = jnp.where(mask, ew[jnp.maximum(epos, 0)], 0.0)
                 acc, flag = self.ack.spdmm(h_tile, cols, v, mask, acc,
                                            flag, op)
                 self.stats.tile_ops += 1
@@ -297,15 +339,13 @@ class BinaryExecutor:
         return self._assemble(out_tiles, nb, fo_pad // n2)
 
     # ------------------------------------------------------------------ #
-    def _run_vector_inner(self, lp, meta, pg, h_in, weights):
+    def _run_vector_inner(self, lp, meta, pg, h_in, weights, gtiles=None):
         n1, n2 = pg.config.n1, pg.config.n2
         pair = lp.mode == 1          # CSI mode bit — the binary decides
         ew = jnp.zeros((pg.n_edges + 1,), jnp.float32)
         for tp in self._block_order(lp):
             j, k, s = tp.out_j, tp.tile_k, tp.slice_id
-            t = pg.tiles[(j, k)][s]
-            cols = jnp.asarray(t.cols)
-            mask = jnp.asarray(t.edge_pos >= 0)
+            cols, _, mask, epos = _tile_arrays(pg, gtiles, j, k, s)
             acc = jnp.zeros(cols.shape, jnp.float32)
             for ins in tp.compute:           # SDDMM steps: args=(j,k,i,s)
                 i = ins.args[2]
@@ -317,9 +357,8 @@ class BinaryExecutor:
                                      pair_sum=pair)
                 self.stats.tile_ops += 1
             acc = self._epilogue(tp, meta, acc, weights, 0, n2)
-            epos = jnp.asarray(
-                np.where(t.edge_pos >= 0, t.edge_pos, pg.n_edges))
-            ew = ew.at[epos.ravel()].set(acc.ravel())
+            idx = jnp.where(mask, epos, pg.n_edges)
+            ew = ew.at[idx.ravel()].set(acc.ravel())
             if not self.overlap:
                 jax.block_until_ready(ew)
         return ew[: pg.n_edges]
@@ -373,7 +412,7 @@ class BinaryExecutor:
         return self._assemble(out_tiles, nb, nf)
 
     # ------------------------------------------------------------------ #
-    def _run_edge_act(self, lp, pg, ew_in):
+    def _run_edge_act(self, lp, pg, ew_in, gtiles=None):
         """Edge activations; EDGE_SOFTMAX uses the two-pass tile scheme
         (max/sum accumulated per destination row across a shard's tiles,
         the Activation Unit's exp/divide applied per tile)."""
@@ -386,31 +425,29 @@ class BinaryExecutor:
         nb = pg.n_blocks
         ew = jnp.zeros((pg.n_edges + 1,), jnp.float32)
         for j in range(nb):
-            row_tiles = [(k, s, t) for (jj, k), ts in sorted(pg.tiles.items())
-                         if jj == j for s, t in enumerate(ts)]
+            row_tiles = [(k, s) for (jj, k), ts in sorted(pg.tiles.items())
+                         if jj == j for s in range(len(ts))]
             if not row_tiles:
                 continue
             mx = jnp.full((n1,), -3.4e38, jnp.float32)
-            for _, _, t in row_tiles:
-                mask = jnp.asarray(t.edge_pos >= 0)
-                epos = jnp.asarray(np.maximum(t.edge_pos, 0))
-                sc = jnp.where(mask, ew_in[epos], -3.4e38)
+            for k, s in row_tiles:
+                _, _, mask, epos = _tile_arrays(pg, gtiles, j, k, s)
+                sc = jnp.where(mask, ew_in[jnp.maximum(epos, 0)], -3.4e38)
                 mx = jnp.maximum(mx, jnp.max(sc, axis=1))
             mx = jnp.where(mx <= -3.4e38, 0.0, mx)
             den = jnp.zeros((n1,), jnp.float32)
             exps = []
-            for _, _, t in row_tiles:
-                mask = jnp.asarray(t.edge_pos >= 0)
-                epos = jnp.asarray(np.maximum(t.edge_pos, 0))
-                e = jnp.where(mask, jnp.exp(ew_in[epos] - mx[:, None]), 0.0)
+            for k, s in row_tiles:
+                _, _, mask, epos = _tile_arrays(pg, gtiles, j, k, s)
+                e = jnp.where(mask, jnp.exp(ew_in[jnp.maximum(epos, 0)]
+                                            - mx[:, None]), 0.0)
                 den = den + jnp.sum(e, axis=1)
-                exps.append((t, mask, e))
+                exps.append((mask, epos, e))
                 self.stats.tile_ops += 1
             den = jnp.maximum(den, 1e-12)
-            for t, mask, e in exps:
+            for mask, epos, e in exps:
                 out_t = e / den[:, None]
-                idx = jnp.asarray(
-                    np.where(t.edge_pos >= 0, t.edge_pos, pg.n_edges))
+                idx = jnp.where(mask, epos, pg.n_edges)
                 ew = ew.at[idx.ravel()].set(
                     jnp.where(mask, out_t, 0.0).ravel())
         return ew[: pg.n_edges]

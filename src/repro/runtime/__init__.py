@@ -19,6 +19,13 @@ runtime, the host-scale projection of the paper's Algorithm 9:
     throughput, queue depth, batch occupancy, program-cache hit rate)
     exported as a JSON-serializable snapshot.
 
+The per-user request layer sits one level above: :mod:`repro.sampling`
+turns "label these vertices" traffic into bucketed, graph-as-data
+requests whose cache keys collide per geometry bucket — exactly the
+same-key grouping the :class:`Batcher` coalesces — so sampled
+ego-network serving rides this runtime unchanged
+(:class:`repro.sampling.SamplingService` wraps an :class:`OverlayPool`).
+
 Quickstart::
 
     from repro.runtime import OverlayPool

@@ -145,9 +145,11 @@ class ServeLoop:
         completion store).  Online callers must drain periodically:
         completed responses are retained here until collected."""
         self.flush()
-        for f in self._futures:
+        # detach before raising: a failed batch propagates its exception
+        # ONCE, instead of poisoning every later drain with a stale error
+        futures, self._futures = self._futures, []
+        for f in futures:
             f.result()              # propagate worker exceptions
-        self._futures.clear()
         with self._lock:
             out = [self._results[i] for i in sorted(self._results)]
             self._results.clear()

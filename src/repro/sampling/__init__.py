@@ -1,0 +1,40 @@
+"""repro.sampling — per-user mini-batch ego-network inference.
+
+The layer below :mod:`repro.runtime`: realistic heavy traffic asks
+"infer labels for *these* target vertices", not "run the whole graph"
+(Zhang et al., arXiv 2206.08536).  Sampled ego networks have wildly
+varying geometry, which would thrash the engine's program cache; this
+package normalizes them at runtime instead of recompiling (the
+Dynasparse move, arXiv 2303.12901):
+
+  * :mod:`~repro.sampling.csr` — cached CSR in-adjacency view on
+    :class:`~repro.core.graph.Graph` (O(degree) host-side lookup);
+  * :mod:`~repro.sampling.sampler` — seeded, deterministic k-hop fanout
+    sampling (GraphSAGE-style caps, ``"full"`` fallback), targets-first
+    relabeling, per-hop frontiers recorded;
+  * :mod:`~repro.sampling.buckets` — power-of-two geometry buckets with
+    canonical ELL layouts; one compiled program per bucket, per-request
+    topology as runtime ``graph_data`` (inert zero padding);
+  * :mod:`~repro.sampling.service` — :class:`SamplingService`: wraps an
+    :class:`~repro.runtime.OverlayPool`; sample -> bucket -> batch ->
+    overlay -> un-pad, returning per-target logits.
+
+Quickstart::
+
+    from repro.sampling import SamplingService, TargetRequest
+
+    svc = SamplingService(graph, features, n_overlays=2, geometry=geom)
+    resp = svc.submit(TargetRequest(targets=[7, 42], model="b1",
+                                    fanouts=(10, 5)))
+    resp.logits                                # [2, n_classes]
+"""
+from .buckets import Bucket, bucket_for, layout_graph, template_graph
+from .csr import CSR, build_csr, in_csr
+from .sampler import EgoNet, sample_ego
+from .service import SamplingService, TargetRequest, TargetResponse
+
+__all__ = [
+    "Bucket", "CSR", "EgoNet", "SamplingService", "TargetRequest",
+    "TargetResponse", "bucket_for", "build_csr", "in_csr", "layout_graph",
+    "sample_ego", "template_graph",
+]
