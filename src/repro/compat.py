@@ -1,0 +1,83 @@
+"""JAX API-generation compatibility shims.
+
+The LM-scaffolding half of the seed (dryrun / distributed / models) was
+written against the sharding-in-types API generation (``jax.set_mesh``,
+``jax.sharding.AxisType``, ``jax.shard_map``); the GNN overlay half runs
+fine on older releases.  This module keeps BOTH halves working on either
+generation by dispatching on feature presence, not version strings:
+
+  * :func:`make_mesh` — ``jax.make_mesh`` with ``axis_types=Auto`` when
+    the installed JAX has :class:`jax.sharding.AxisType`, without it
+    otherwise (Auto is the legacy default, so semantics match);
+  * :func:`set_mesh` — ``jax.set_mesh`` / ``jax.sharding.use_mesh`` when
+    available, else the legacy ``with mesh:`` context (which is what
+    those APIs grew out of);
+  * :func:`get_abstract_mesh` — the ambient mesh for soft sharding
+    constraints; falls back to the legacy thread-resources physical
+    mesh (empty mesh -> ``None``-ish object with no axis names, exactly
+    like the new API on a single device);
+  * :func:`shard_map` — ``jax.shard_map`` or the experimental module,
+    translating the ``check_vma`` keyword to the old ``check_rep``.
+
+Everything degrades to a working single-device no-op, so importing this
+module never touches device state.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              *, devices: Optional[Any] = None):
+    """``jax.make_mesh`` across API generations (Auto axis types)."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if HAS_AXIS_TYPE:
+        kwargs["axis_types"] = (
+            jax.sharding.AxisType.Auto,) * len(tuple(axis_names))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    # Legacy: Mesh is itself a context manager feeding thread resources.
+    return mesh
+
+
+def get_abstract_mesh():
+    """The ambient mesh (set by :func:`set_mesh`), or an empty mesh.
+
+    Callers test ``mesh.axis_names`` before using it, which is exactly
+    how the new API signals "no mesh" too.
+    """
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        return fn()
+    try:  # legacy thread-local mesh context
+        from jax._src.mesh import thread_resources
+        return thread_resources.env.physical_mesh
+    except Exception:  # pragma: no cover - very old/very new layouts
+        return None
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` across API generations.
+
+    The new API's ``check_vma`` keyword is the old ``check_rep``; both
+    toggle the replication/varying-axes checker.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)

@@ -97,6 +97,27 @@ class PartitionedGraph:
     def total_nnz(self) -> int:
         return sum(t.nnz for ts in self.tiles.values() for t in ts)
 
+    # -------------------------------------------------------------- #
+    # Working-set sizing for the partition-centric streaming executor
+    # (one destination shard resident at a time, Algorithms 6-8).
+    # -------------------------------------------------------------- #
+    def subfiber_bytes(self, f_pad: int, dtype_bytes: int = 4) -> int:
+        """Bytes of one staged source block: an [n1, f_pad] sub-fiber."""
+        return self.config.n1 * int(f_pad) * dtype_bytes
+
+    def shard_tile_bytes(self, j: int) -> int:
+        """Bytes of destination shard ``j``'s sub-shard tiles (row j of
+        the (j, k) tile grid) — the EDGE-buffer half of its working set."""
+        return sum(t.cols.nbytes + t.vals.nbytes + t.edge_pos.nbytes
+                   for k in range(self.n_blocks)
+                   for t in self.tiles.get((j, k), []))
+
+    def shard_working_set_bytes(self, j: int, sources, f_pad: int) -> int:
+        """Device bytes to stage destination shard ``j``: its tiles plus
+        the source sub-fibers ``sources`` it gathers from."""
+        return (self.shard_tile_bytes(j)
+                + len(set(sources)) * self.subfiber_bytes(f_pad))
+
 
 def partition_graph(g: Graph, cfg: PartitionConfig) -> PartitionedGraph:
     """COO -> fiber-shard blocked-ELL tiles.  O(|V| + |E|) (paper §8.1)."""

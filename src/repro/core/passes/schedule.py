@@ -22,8 +22,9 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+from ..ir import LayerType
 from .kernel_map import Program
 
 
@@ -66,6 +67,101 @@ def lpt_assign(costs: Sequence[float], n_bins: int,
         loads[b] = load + costs[i]
         heapq.heappush(heap, (loads[b], b))
     return assignment, loads
+
+
+# --------------------------------------------------------------------------- #
+# Partition-centric residency schedule (paper §6.5, Algorithms 6-8).
+#
+# The streaming executor works one DESTINATION SHARD at a time: it stages
+# shard j's working set (its (j, k) sub-shard tiles plus the source
+# sub-fibers k they reference) in the device buffers, computes, writes the
+# output sub-fibers back to the host, and meanwhile prefetches shard
+# j+1's working set — the paper's computation/communication overlap with
+# double-buffered DDR<->BRAM transfers.  This pass emits everything that
+# executor needs as *manifest data* so a program loaded from a ``.gagi``
+# file streams identically to one compiled in-process:
+#
+#   * per-layer destination-shard order, greedily sequenced so that
+#     consecutive shards share staged source blocks (transfer reuse);
+#   * per-shard source-block lists (which sub-fibers to stage);
+#   * an interval-liveness table: for every layer output (and the input
+#     features, id -1), the position of its LAST consumer in the layer
+#     stream — the executor frees each padded output the moment its last
+#     consumer has run, so peak memory follows the live-set, not the
+#     model depth.
+# --------------------------------------------------------------------------- #
+def _layer_consumes(l) -> List[int]:
+    """Value ids layer ``l`` reads (−1 = the input feature matrix),
+    mirroring the executor's operand resolution exactly."""
+    ewl = l.attrs.get("edge_weight_layer")
+    feat_parents = [p for p in l.parent_ids if p != ewl]
+    if l.layer_type == LayerType.VECTOR_ADD:
+        consumed = [int(o) for o in l.attrs.get("operands", [])]
+    else:
+        consumed = [int(feat_parents[0]) if feat_parents else -1]
+    if ewl is not None:
+        consumed.append(int(ewl))
+    return consumed
+
+
+def _order_shards(sources: Dict[int, Set[int]]) -> List[int]:
+    """Greedy max-overlap sequencing of destination shards: start at the
+    lowest shard id, then repeatedly pick the unvisited shard sharing
+    the most source blocks with the working set just staged (ties to
+    the lowest id, so the order is deterministic).  Consecutive shards
+    then reuse staged sub-fibers instead of re-transferring them."""
+    todo = sorted(sources)
+    if not todo:
+        return []
+    order = [todo.pop(0)]
+    while todo:
+        prev = sources[order[-1]]
+        best = max(todo, key=lambda j: (len(sources[j] & prev), -j))
+        todo.remove(best)
+        order.append(best)
+    return order
+
+
+def residency_schedule(prog: Program) -> dict:
+    """Shard order + source lists + liveness, as JSON-ready manifest data.
+
+    Keys are stringified so the in-process manifest is byte-identical to
+    one round-tripped through ``.gagi`` (json object keys are strings).
+    """
+    last_use: Dict[int, int] = {}
+    layers: Dict[str, dict] = {}
+    sink_pos = len(prog.layer_blocks)
+    for t, lb in enumerate(prog.layer_blocks):
+        for c in _layer_consumes(lb.layer):
+            last_use[c] = t
+        sources: Dict[int, Set[int]] = {}
+        for tb in lb.tiling_blocks:
+            j = tb.out_j
+            if j < 0:
+                continue
+            e = sources.setdefault(j, set())
+            if tb.kind == "spdmm":
+                e.update(k for k, _ in tb.k_list)
+            elif tb.kind == "sddmm":
+                e.add(j)
+                e.add(tb.tile_k)
+            elif tb.kind in ("act", "affine") and tb.out_i < 0:
+                pass                        # edge activation: no fibers
+            else:
+                e.add(j)                    # gemm/vadd/act: own row block
+        order = _order_shards(sources)
+        layers[str(lb.layer_id)] = {
+            "shard_order": [int(j) for j in order],
+            "sources": {str(j): sorted(int(k) for k in ks)
+                        for j, ks in sources.items()},
+        }
+    # The sink is consumed by the final output slice, after every layer.
+    if prog.layer_blocks:
+        last_use[prog.layer_blocks[-1].layer_id] = sink_pos
+    return {
+        "last_use": {str(k): int(v) for k, v in sorted(last_use.items())},
+        "layers": layers,
+    }
 
 
 def run(prog: Program, n_pes: int = 8) -> ScheduleReport:

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def pipeline_apply(
     stage_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
@@ -77,7 +79,7 @@ def pipeline_apply(
             jnp.where(stage_id == n_stages - 1, out, jnp.zeros_like(out)),
             axis)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(axis), P(axis)),
         out_specs=P(),

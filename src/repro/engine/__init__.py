@@ -28,12 +28,13 @@ from .decoder import ExecutionPlan, LayerPlan, TilePlan, decode_binary
 from .engine import (Engine, EngineStats, InferenceRequest,
                      InferenceResponse, graph_signature, model_signature,
                      stack_features, stack_graph_data)
-from .executor import BinaryExecutor, ExecStats
+from .executor import BinaryExecutor, ExecStats, ResidentBudgetError
 from .program import CompiledProgram, build_manifest, from_program
 
 __all__ = [
     "Engine", "EngineStats", "InferenceRequest", "InferenceResponse",
-    "CompiledProgram", "BinaryExecutor", "ExecStats", "LRUCache",
+    "CompiledProgram", "BinaryExecutor", "ExecStats",
+    "ResidentBudgetError", "LRUCache",
     "ExecutionPlan", "LayerPlan", "TilePlan", "decode_binary",
     "build_manifest", "from_program", "graph_signature", "model_signature",
     "stack_features", "stack_graph_data",

@@ -210,15 +210,28 @@ class Engine:
                  n_pes: int = 8, backend: str = "xla", *,
                  overlap: bool = True, interpret: bool = True,
                  vmem_budget_bytes: int = 3 << 20,
-                 cache_capacity: int = 32) -> None:
+                 cache_capacity: int = 32,
+                 resident_budget_bytes: Optional[int] = None) -> None:
         self.geometry = geometry
         self.n_pes = n_pes
         self.backend = backend
         self.vmem_budget_bytes = vmem_budget_bytes
-        self._executor = BinaryExecutor(backend=backend, overlap=overlap,
-                                        interpret=interpret)
+        self._executor = BinaryExecutor(
+            backend=backend, overlap=overlap, interpret=interpret,
+            resident_budget_bytes=resident_budget_bytes)
         self.cache: LRUCache[CompiledProgram] = LRUCache(cache_capacity)
         self.stats = EngineStats()
+
+    @property
+    def resident_budget_bytes(self) -> Optional[int]:
+        """Device-residency budget enforced by the executor: the
+        device-resident path refuses runs whose liveness-aware peak
+        exceeds it, the ``residency="host"`` path streams within it."""
+        return self._executor.resident_budget_bytes
+
+    @resident_budget_bytes.setter
+    def resident_budget_bytes(self, v: Optional[int]) -> None:
+        self._executor.resident_budget_bytes = v
 
     # ------------------------------------------------------------------ #
     @property
@@ -249,7 +262,7 @@ class Engine:
     # ------------------------------------------------------------------ #
     def compile(self, model: ModelSpec, graph: Graph, *, seed: int = 0,
                 order_opt: bool = True, fusion: bool = True,
-                use_cache: bool = True,
+                use_cache: bool = True, residency: Optional[str] = None,
                 _key: Optional[str] = None) -> CompiledProgram:
         """Model + graph -> CompiledProgram (through the §6 pipeline).
 
@@ -257,12 +270,24 @@ class Engine:
         a :class:`ModelIR`.  Hits in the program cache skip compilation.
         ``_key`` lets callers that already computed the cache key (submit)
         skip rehashing the graph/weights.
+
+        ``residency`` ("device" | "host") sets the program's default
+        execution mode: "host" keeps features host-resident and streams
+        one destination shard's working set to the device at a time
+        (bit-identical results, bounded device footprint).  The returned
+        handle carries the default; the shared cache entry is unchanged.
         """
+        if residency not in (None, "device", "host"):
+            raise ValueError(f"residency must be 'device' or 'host', "
+                             f"got {residency!r}")
         key = _key or self.cache_key(model, graph, seed=seed,
                                      order_opt=order_opt, fusion=fusion)
         if use_cache:
             cached = self.cache.get(key)
             if cached is not None:
+                if residency is not None:
+                    return dataclasses.replace(
+                        cached, default_residency=residency)
                 return cached
         model_ir = build(model, graph, seed) if isinstance(model, str) \
             else model
@@ -273,31 +298,50 @@ class Engine:
         prog = from_program(cr.program, binary=cr.binary, t_loc=cr.t_loc,
                             cache_key=key, graph_name=graph.name,
                             source=cr)
+        if residency is not None:
+            prog = dataclasses.replace(prog, default_residency=residency)
         self.stats.compiles += 1
         self.stats.total_t_loc += cr.t_loc
         if use_cache:
             # The cached copy drops `source` (the full IR/Program/report
             # graph): execution needs only binary+manifest+weights+tiles,
             # so a long-lived serving cache stays slim.  The caller that
-            # paid for this compile still gets the reports.
-            self.cache.put(key, dataclasses.replace(prog, source=None))
+            # paid for this compile still gets the reports.  It also
+            # drops the residency default: serving traffic runs
+            # device-resident unless a caller asks otherwise.
+            self.cache.put(key, dataclasses.replace(
+                prog, source=None, default_residency=None))
         return prog
 
     def run(self, prog: CompiledProgram, x,
             weights: Optional[Dict[str, np.ndarray]] = None,
-            graph_data: Optional[dict] = None):
-        """Execute a compiled program by decoding its ISA binary."""
+            graph_data: Optional[dict] = None,
+            residency: Optional[str] = None):
+        """Execute a compiled program by decoding its ISA binary.
+
+        ``residency="host"`` streams the partition-centric out-of-core
+        path (features host-resident, one shard's working set on device
+        at a time); ``"device"`` keeps every padded layer output on
+        device.  Results are bit-identical; ``None`` uses the program's
+        compile-time default."""
+        residency = residency or prog.default_residency or "device"
         return self._executor.run(prog, x, weights=weights,
-                                  graph_data=graph_data)
+                                  graph_data=graph_data,
+                                  residency=residency)
 
     def run_batch(self, prog: CompiledProgram, xs,
                   weights: Optional[Dict[str, np.ndarray]] = None,
-                  graph_data: Optional[dict] = None):
+                  graph_data: Optional[dict] = None,
+                  residency: Optional[str] = None):
         """One binary pass for stacked ``[N, V, F]`` features -> [N, V, C].
         ``graph_data`` (stacked, leading batch axis) lets each lane carry
-        its own topology over the same compiled program."""
+        its own topology over the same compiled program.  ``residency``
+        as in :meth:`run` ("host" runs lanes sequentially, each within
+        the device budget)."""
+        residency = residency or prog.default_residency or "device"
         return self._executor.run_batch(prog, xs, weights=weights,
-                                        graph_data=graph_data)
+                                        graph_data=graph_data,
+                                        residency=residency)
 
     def load(self, path: str) -> CompiledProgram:
         """Load a ``.gagi`` bundle saved by ``CompiledProgram.save``."""

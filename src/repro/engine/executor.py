@@ -67,16 +67,100 @@ def _tile_arrays(pg, gtiles, j: int, k: int, s: int):
     return d["cols"], d["vals"], d["mask"], d["epos"]
 
 
+class ResidentBudgetError(RuntimeError):
+    """Raised when an execution mode cannot honor ``resident_budget_bytes``.
+
+    Device-resident runs raise it up front (from the liveness-aware peak
+    estimate); the partition-centric streaming path raises it only if a
+    single shard's double-buffered working set exceeds the budget."""
+
+
 @dataclasses.dataclass
 class ExecStats:
     tile_ops: int = 0
     layers: int = 0
     runs: int = 0
+    # Liveness / streaming telemetry (peaks are high-water marks).
+    peak_live_outputs: int = 0      # layer outputs alive at once
+    peak_live_bytes: int = 0        # bytes of those outputs
+    shards_streamed: int = 0        # destination shards staged (host mode)
+    h2d_bytes: int = 0              # bytes shipped host -> device
+    peak_stage_bytes: int = 0       # double-buffered working set peak
 
     def add(self, other: "ExecStats") -> None:
         self.tile_ops += other.tile_ops
         self.layers += other.layers
         self.runs += other.runs
+        self.shards_streamed += other.shards_streamed
+        self.h2d_bytes += other.h2d_bytes
+        self.peak_live_outputs = max(self.peak_live_outputs,
+                                     other.peak_live_outputs)
+        self.peak_live_bytes = max(self.peak_live_bytes,
+                                   other.peak_live_bytes)
+        self.peak_stage_bytes = max(self.peak_stage_bytes,
+                                    other.peak_stage_bytes)
+
+
+def _nbytes(a) -> int:
+    """Array bytes; works for numpy arrays, jax arrays, and tracers."""
+    return int(a.size) * a.dtype.itemsize
+
+
+def _layer_out_bytes(lp: LayerPlan, pg) -> int:
+    """Bytes of the padded output a layer keeps alive (liveness units)."""
+    n1, n2 = pg.config.n1, pg.config.n2
+    if lp.layer_type == LayerType.VECTOR_INNER or lp.on_edges:
+        return (pg.n_edges + 1) * 4
+    f = lp.f_out if lp.layer_type == LayerType.LINEAR else lp.f_in
+    fp = ((max(f, 1) + n2 - 1) // n2) * n2
+    return pg.n_blocks * n1 * fp * 4
+
+
+def derive_residency(plan, lmeta: dict) -> dict:
+    """Rebuild the residency schedule from the decoded binary alone —
+    the fallback for ``.gagi`` bundles written before manifests carried
+    a ``residency`` section.  Mirrors
+    :func:`repro.core.passes.schedule.residency_schedule` (same greedy
+    shard sequencing, same liveness rules) but reads TilePlans instead
+    of compiler TilingBlocks."""
+    from repro.core.passes.schedule import _order_shards
+    last_use: Dict[int, int] = {}
+    layers: Dict[str, dict] = {}
+    for t, lp in enumerate(plan.layers):
+        meta = lmeta[str(lp.layer_id)]
+        ewl = meta.get("edge_weight_layer")
+        feat_parents = [p for p in meta["parents"] if p != ewl]
+        if lp.layer_type == LayerType.VECTOR_ADD:
+            consumed = [int(o) for o in meta["operands"]]
+        else:
+            consumed = [int(feat_parents[0]) if feat_parents else -1]
+        if ewl is not None:
+            consumed.append(int(ewl))
+        for c in consumed:
+            last_use[c] = t
+        sources: Dict[int, set] = {}
+        for tp in lp.tiles:
+            j = tp.out_j
+            if j < 0:
+                continue
+            e = sources.setdefault(j, set())
+            if lp.layer_type == LayerType.AGGREGATE:
+                e.update(ins.args[1] for ins in tp.compute)
+            elif lp.layer_type == LayerType.VECTOR_INNER:
+                e.add(j)
+                e.add(tp.tile_k)
+            elif not lp.on_edges:
+                e.add(j)
+        layers[str(lp.layer_id)] = {
+            "shard_order": [int(j) for j in _order_shards(sources)],
+            "sources": {str(j): sorted(int(k) for k in ks)
+                        for j, ks in sources.items()},
+        }
+    if plan.layers:
+        last_use[plan.layers[-1].layer_id] = len(plan.layers)
+    return {"last_use": {str(k): int(v)
+                         for k, v in sorted(last_use.items())},
+            "layers": layers}
 
 
 class BinaryExecutor:
@@ -89,20 +173,122 @@ class BinaryExecutor:
     """
 
     def __init__(self, backend: str = "xla", overlap: bool = True,
-                 interpret: bool = True) -> None:
+                 interpret: bool = True,
+                 resident_budget_bytes: Optional[int] = None) -> None:
         self.ack = ACK(backend=backend, interpret=interpret)
         self.overlap = overlap
+        self.resident_budget_bytes = resident_budget_bytes
+        # Optional observer called as hook(event, layer_id, live_count)
+        # with event in {"alloc", "free"} whenever a layer output is
+        # materialized or released (tests count liveness through this).
+        self.liveness_hook = None
         self.stats = ExecStats()        # per-run (last run)
         self.total = ExecStats()        # lifetime accumulation
 
     # ------------------------------------------------------------------ #
+    def _residency(self, prog: CompiledProgram) -> dict:
+        """Manifest residency section, derived from the binary for
+        pre-residency ``.gagi`` bundles (cached on the program)."""
+        res = prog.manifest.get("residency")
+        if res is None:
+            res = prog.__dict__.get("_derived_residency")
+            if res is None:
+                res = derive_residency(prog.plan(), prog.manifest["layers"])
+                prog.__dict__["_derived_residency"] = res
+        return res
+
+    def estimate_device_peak_bytes(self, prog: CompiledProgram,
+                                   x_cols: Optional[int] = None,
+                                   assume_liveness: bool = True,
+                                   batch: int = 1) -> int:
+        """Liveness-aware peak device bytes of a device-resident run:
+        graph tiles + weights + the input feature matrix + the maximum
+        over layer steps of the concurrently-live padded outputs.
+        ``assume_liveness=False`` prices the pre-liveness executor that
+        kept every layer's output alive for the whole pass.  ``batch``
+        scales the per-lane parts (features + live outputs) for a
+        vmapped ``run_batch`` pass; tiles/weights are broadcast."""
+        plan = prog.plan()
+        pg = prog.pgraph
+        n1, n2 = pg.config.n1, pg.config.n2
+        vp = pg.n_blocks * n1
+        res = self._residency(prog)
+        last_use = {int(k): v for k, v in res["last_use"].items()}
+        static = (pg.tile_bytes()
+                  + sum(_nbytes(np.asarray(w))
+                        for w in prog.weights.values())
+                  + _nbytes(np.asarray(pg.inv_in_degree)))
+        if not plan.layers:
+            return static
+        fin_pad0 = ((max(plan.layers[0].f_in, 1) + n2 - 1) // n2) * n2
+        xw = fin_pad0 if x_cols is None else max(
+            fin_pad0, ((x_cols + n2 - 1) // n2) * n2)
+        x_bytes = vp * xw * 4   # kept for the whole pass in device mode
+        sizes = {lp.layer_id: _layer_out_bytes(lp, pg)
+                 for lp in plan.layers}
+        births = {lp.layer_id: t for t, lp in enumerate(plan.layers)}
+        n = len(plan.layers)
+        if not assume_liveness:
+            return static + batch * (x_bytes + sum(sizes.values()))
+        peak = 0
+        for t in range(n):
+            live = sum(sz for lid, sz in sizes.items()
+                       if births[lid] <= t <= max(last_use.get(lid, n),
+                                                  births[lid]))
+            peak = max(peak, live)
+        return static + batch * (x_bytes + peak)
+
+    # ------------------------------------------------------------------ #
+    def _watermark(self, event: str, layer_id: int, vals: Dict,
+                   edge_vals: Dict) -> None:
+        live = len(vals) + len(edge_vals)
+        if event == "alloc":
+            self.stats.peak_live_outputs = max(
+                self.stats.peak_live_outputs, live)
+            self.stats.peak_live_bytes = max(
+                self.stats.peak_live_bytes,
+                sum(_nbytes(a) for d in (vals, edge_vals)
+                    for a in d.values()))
+        if self.liveness_hook is not None:
+            self.liveness_hook(event, layer_id, live)
+
+    def _free_dead(self, t: int, sink: int, last_use: Dict[int, int],
+                   vals: Dict, edge_vals: Dict) -> None:
+        """Release every value whose LAST consumer was step ``t`` —
+        interval liveness from the manifest's residency table."""
+        for d in (vals, edge_vals):
+            for lid in [l for l in d
+                        if l != sink and last_use.get(l, -1) == t]:
+                del d[lid]
+                self._watermark("free", lid, vals, edge_vals)
+
     def run(self, prog: CompiledProgram, x: jnp.ndarray,
             weights: Optional[Dict[str, np.ndarray]] = None,
-            graph_data: Optional[dict] = None) -> jnp.ndarray:
+            graph_data: Optional[dict] = None,
+            residency: str = "device") -> jnp.ndarray:
+        if residency not in ("device", "host"):
+            raise ValueError(f"residency must be 'device' or 'host', "
+                             f"got {residency!r}")
+        if residency == "host":
+            if graph_data is not None:
+                raise ValueError(
+                    "graph-as-data execution is device-resident only "
+                    "(bucketed subgraphs are small by construction)")
+            return self._run_host(prog, x, weights)
+        if self.resident_budget_bytes is not None:
+            est = self.estimate_device_peak_bytes(prog, int(x.shape[1]))
+            if est > self.resident_budget_bytes:
+                raise ResidentBudgetError(
+                    f"device-resident execution needs ~{est} bytes "
+                    f"(liveness-aware peak) but resident_budget_bytes="
+                    f"{self.resident_budget_bytes}; re-run with "
+                    f"residency='host' to stream shard-by-shard")
         self.stats = ExecStats(runs=1)
         plan = prog.plan()
         man = prog.manifest
         pg = prog.pgraph
+        res = self._residency(prog)
+        last_use = {int(k): v for k, v in res["last_use"].items()}
         gtiles = graph_data["tiles"] if graph_data is not None else None
         weights = weights if weights is not None else prog.weights
         lmeta = man["layers"]
@@ -127,7 +313,8 @@ class BinaryExecutor:
                               if graph_data is not None
                               else pg.inv_in_degree)
 
-        for lp in plan.layers:
+        sink = man["sink"]
+        for t, lp in enumerate(plan.layers):
             meta = lmeta[str(lp.layer_id)]
             self.stats.layers += 1
             ewl = meta.get("edge_weight_layer")
@@ -165,15 +352,19 @@ class BinaryExecutor:
             if not self.overlap:
                 tree = vals.get(lp.layer_id, edge_vals.get(lp.layer_id))
                 jax.block_until_ready(tree)
+            self._watermark("alloc", lp.layer_id, vals, edge_vals)
+            # Interval liveness: drop outputs whose last consumer just
+            # ran, so peak memory follows the live-set, not model depth.
+            self._free_dead(t, sink, last_use, vals, edge_vals)
 
-        sink = man["sink"]
         self.total.add(self.stats)
         return vals[sink][:nv, :man["sink_f_out"]]
 
     # ------------------------------------------------------------------ #
     def run_batch(self, prog: CompiledProgram, xs: jnp.ndarray,
                   weights: Optional[Dict[str, np.ndarray]] = None,
-                  graph_data: Optional[dict] = None) -> jnp.ndarray:
+                  graph_data: Optional[dict] = None,
+                  residency: str = "device") -> jnp.ndarray:
         """Execute ONE binary pass for a stacked ``[N, V, F]`` batch.
 
         The instruction stream is decoded and traversed once; every tile
@@ -196,6 +387,34 @@ class BinaryExecutor:
             raise ValueError(
                 f"run_batch expects stacked [N, V, F] features, got "
                 f"shape {tuple(xs.shape)}")
+        if residency == "host":
+            # Streaming mode trades latency for footprint: lanes run
+            # sequentially (each an independent shard-streamed pass) so
+            # the device never holds more than one working set.
+            if graph_data is not None:
+                raise ValueError(
+                    "graph-as-data execution is device-resident only")
+            batch = ExecStats()
+            ys = []
+            for i in range(xs.shape[0]):
+                ys.append(self.run(prog, xs[i], weights=weights,
+                                   residency="host"))
+                batch.add(self.stats)
+            batch.runs = 1                  # one logical batched pass
+            self.stats = batch
+            return jnp.stack(ys)
+        # Budget-gate the vmapped pass at BATCH scale, on every call —
+        # per-lane checks inside run() undercount by the batch factor,
+        # and memoized replays never re-enter run() at all.
+        if self.resident_budget_bytes is not None:
+            est = self.estimate_device_peak_bytes(
+                prog, int(xs.shape[2]), batch=int(xs.shape[0]))
+            if est > self.resident_budget_bytes:
+                raise ResidentBudgetError(
+                    f"device-resident batch of {int(xs.shape[0])} needs "
+                    f"~{est} bytes (liveness-aware peak) but "
+                    f"resident_budget_bytes={self.resident_budget_bytes};"
+                    f" re-run with residency='host' or a smaller batch")
         if weights is not None:
             if graph_data is not None:
                 return jax.vmap(lambda x, gd: self.run(
@@ -223,6 +442,439 @@ class BinaryExecutor:
         self.stats = dataclasses.replace(stats)
         self.total.add(self.stats)
         return fn(xs, graph_data) if graph_data is not None else fn(xs)
+
+    # ------------------------------------------------------------------ #
+    # Partition-centric out-of-core execution (paper §6.5, Alg. 6-8).
+    #
+    # Features stay HOST-resident (numpy); the device holds one
+    # destination shard's working set at a time — its (j, k) sub-shard
+    # tiles plus the source sub-fibers they gather from — while the NEXT
+    # shard's working set is already in flight (``jax.device_put`` is
+    # async), the software analogue of the paper's double-buffered
+    # DDR<->BRAM overlap.  Every tile op runs through the same jitted
+    # ACK kernels on the same values in the same order as the
+    # device-resident path, so results are bit-identical.
+    # ------------------------------------------------------------------ #
+    def _stage(self, arrs: Dict[str, np.ndarray]):
+        """Ship one working set host -> device; returns (staged, bytes)."""
+        staged = {k: jax.device_put(a) for k, a in arrs.items()}
+        nbytes = sum(_nbytes(a) for a in arrs.values())
+        self.stats.h2d_bytes += nbytes
+        return staged, nbytes
+
+    def _stream_shards(self, order, build, compute) -> None:
+        """Drive one layer's destination shards through the double
+        buffer: stage shard ``order[0]``, then for each shard dispatch
+        its tile ops (async), stage the NEXT shard's working set while
+        they run, and only then block on the outputs and write them back
+        to the host.  ``build(j)`` assembles shard j's working set as
+        name -> numpy array; ``compute(j, staged)`` dispatches the tile
+        ops and returns ``(write_back, device_value)`` pairs."""
+        if not order:
+            return
+        staged_next, next_bytes = self._stage(build(order[0]))
+        for idx, j in enumerate(order):
+            staged, cur_bytes = staged_next, next_bytes
+            pending = compute(j, staged)
+            if idx + 1 < len(order):
+                staged_next, next_bytes = self._stage(build(order[idx + 1]))
+            else:
+                staged_next, next_bytes = None, 0
+            window = cur_bytes + next_bytes
+            self.stats.peak_stage_bytes = max(
+                self.stats.peak_stage_bytes, window)
+            if (self.resident_budget_bytes is not None
+                    and window + self._static_bytes
+                    > self.resident_budget_bytes):
+                raise ResidentBudgetError(
+                    f"shard working set ({window} bytes double-buffered "
+                    f"+ {self._static_bytes} resident weights) exceeds "
+                    f"resident_budget_bytes="
+                    f"{self.resident_budget_bytes}; recompile with a "
+                    f"smaller n1 / width_cap")
+            for write, val in pending:
+                write(np.asarray(val))          # D2H; blocks shard j only
+            self.stats.shards_streamed += 1
+
+    def _run_host(self, prog: CompiledProgram, x,
+                  weights: Optional[Dict[str, np.ndarray]] = None
+                  ) -> jnp.ndarray:
+        self.stats = ExecStats(runs=1)
+        plan = prog.plan()
+        man = prog.manifest
+        pg = prog.pgraph
+        res = self._residency(prog)
+        weights = weights if weights is not None else prog.weights
+        self._static_bytes = sum(_nbytes(np.asarray(w))
+                                 for w in weights.values())
+        lmeta = man["layers"]
+        n1, n2, nb = pg.config.n1, pg.config.n2, pg.n_blocks
+        vp = nb * n1
+        nv = pg.n_vertices
+        sink = man["sink"]
+        last_use = {int(k): v for k, v in res["last_use"].items()}
+
+        fin_pad0 = ((max(plan.layers[0].f_in, 1) + n2 - 1) // n2) * n2
+        x_np = np.asarray(x, np.float32)
+        xw = max(fin_pad0, ((x_np.shape[1] + n2 - 1) // n2) * n2)
+        x_host = np.zeros((vp, xw), np.float32)
+        x_host[: x_np.shape[0], : x_np.shape[1]] = x_np
+        vals: Dict[int, np.ndarray] = {}       # layer -> padded output
+        edge_vals: Dict[int, np.ndarray] = {}  # layer -> (E,) edge scores
+
+        for t, lp in enumerate(plan.layers):
+            meta = lmeta[str(lp.layer_id)]
+            rl = res["layers"][str(lp.layer_id)]
+            self.stats.layers += 1
+            ewl = meta.get("edge_weight_layer")
+            feat_parents = [p for p in meta["parents"] if p != ewl]
+            h_in = (vals.get(feat_parents[0], x_host) if feat_parents
+                    else x_host)
+            lt = lp.layer_type
+
+            if lt == LayerType.AGGREGATE:
+                vals[lp.layer_id] = self._host_aggregate(
+                    lp, meta, pg, h_in, edge_vals, weights, rl)
+            elif lt == LayerType.LINEAR:
+                vals[lp.layer_id] = self._host_linear(
+                    lp, meta, pg, h_in, weights, rl)
+            elif lt == LayerType.VECTOR_INNER:
+                edge_vals[lp.layer_id] = self._host_vector_inner(
+                    lp, meta, pg, h_in, weights, rl)
+            elif lt == LayerType.VECTOR_ADD:
+                a_id, b_id = meta["operands"]
+                xa = x_host if a_id == -1 else vals[a_id]
+                xb = x_host if b_id == -1 else vals[b_id]
+                vals[lp.layer_id] = self._host_vadd(
+                    lp, meta, pg, xa, xb, weights, rl)
+            elif lt in (LayerType.ACTIVATION, LayerType.BATCHNORM):
+                if lp.on_edges:
+                    edge_vals[lp.layer_id] = self._host_edge_act(
+                        lp, pg, edge_vals[feat_parents[0]])
+                else:
+                    vals[lp.layer_id] = self._host_vertex_act(
+                        lp, meta, pg, h_in, weights, rl)
+            else:
+                raise ValueError(lt)
+            self._watermark("alloc", lp.layer_id, vals, edge_vals)
+            self._free_dead(t, sink, last_use, vals, edge_vals)
+            if last_use.get(-1, -1) == t:
+                x_host = None          # input's last consumer has run
+
+        out = vals[sink][:nv, : man["sink_f_out"]]
+        self.total.add(self.stats)
+        return jnp.asarray(out)
+
+    # ------------------------------------------------------------------ #
+    def _host_aggregate(self, lp, meta, pg, h_in, edge_vals, weights,
+                        rl) -> np.ndarray:
+        n1, n2, nb = pg.config.n1, pg.config.n2, pg.n_blocks
+        nf = (max(lp.f_in, 1) + n2 - 1) // n2
+        op = {AggOp.SUM: "sum", AggOp.MEAN: "mean",
+              AggOp.MAX: "max", AggOp.MIN: "min"}[AggOp(lp.mode)]
+        ewl = meta.get("edge_weight_layer")
+        ew = edge_vals[ewl] if ewl is not None else None   # host (E,)
+        out = np.zeros((nb * n1, nf * n2), np.float32)
+        by_j: Dict[int, List[TilePlan]] = {}
+        for tp in self._block_order(lp):
+            by_j.setdefault(tp.out_j, []).append(tp)
+        order = [j for j in rl["shard_order"] if j in by_j]
+        srcs = rl["sources"]
+        init = (jnp.full((n1, n2), -3.4e38, jnp.float32) if op == "max" else
+                jnp.full((n1, n2), 3.4e38, jnp.float32) if op == "min" else
+                jnp.zeros((n1, n2), jnp.float32))
+
+        def build(j):
+            arrs = {}
+            for k in srcs.get(str(j), []):
+                arrs[f"h{k}"] = h_in[k * n1:(k + 1) * n1]
+            for k in range(nb):
+                for s, tile in enumerate(pg.tiles.get((j, k), [])):
+                    arrs[f"c{k}:{s}"] = tile.cols
+                    arrs[f"v{k}:{s}"] = tile.vals
+                    arrs[f"m{k}:{s}"] = tile.edge_pos >= 0
+                    if ew is not None:
+                        arrs[f"e{k}:{s}"] = ew[np.maximum(tile.edge_pos,
+                                                          0)]
+            if op == "mean":
+                arrs["deg"] = np.asarray(
+                    pg.inv_in_degree[j * n1:(j + 1) * n1])
+            return arrs
+
+        def compute(j, staged):
+            pending = []
+            for tp in by_j[j]:
+                i = tp.out_i
+                acc = init
+                flag = jnp.zeros((n1,), bool)
+                for ins in tp.compute:       # SPDMM steps, stream order
+                    k, ii = ins.args[1], ins.args[2]
+                    s, dyn = ins.args[3] >> 1, ins.args[3] & 1
+                    h_tile = jax.lax.dynamic_slice(
+                        staged[f"h{k}"], (0, ii * n2), (n1, n2))
+                    cols, v, mask = (staged[f"c{k}:{s}"],
+                                     staged[f"v{k}:{s}"],
+                                     staged[f"m{k}:{s}"])
+                    if dyn:
+                        v = jnp.where(mask, staged[f"e{k}:{s}"], 0.0)
+                    acc, flag = self.ack.spdmm(h_tile, cols, v, mask,
+                                               acc, flag, op)
+                    self.stats.tile_ops += 1
+                if op in ("max", "min"):
+                    acc = jnp.where(flag[:, None], acc, 0.0)
+                elif op == "mean":
+                    acc = acc * staged["deg"][:, None]
+                acc = self._epilogue(tp, meta, acc, weights,
+                                     i * n2, (i + 1) * n2)
+
+                def write(a, i=i, j=j):
+                    out[j * n1:(j + 1) * n1, i * n2:(i + 1) * n2] = a
+                pending.append((write, acc))
+            return pending
+
+        self._stream_shards(order, build, compute)
+        return out
+
+    # ------------------------------------------------------------------ #
+    def _host_linear(self, lp, meta, pg, h_in, weights, rl) -> np.ndarray:
+        n1, n2, nb = pg.config.n1, pg.config.n2, pg.n_blocks
+        fi_pad = ((max(lp.f_in, 1) + n2 - 1) // n2) * n2
+        fo_pad = ((max(lp.f_out, 1) + n2 - 1) // n2) * n2
+        W = np.zeros((fi_pad, fo_pad), np.float32)
+        W0 = np.asarray(weights[meta["W"]], np.float32)
+        W[: W0.shape[0], : W0.shape[1]] = W0
+        Wj = jnp.asarray(W)
+        b = None
+        if "b" in meta:
+            b0 = np.asarray(weights[meta["b"]], np.float32)
+            b = jnp.asarray(np.pad(b0, (0, fo_pad - b0.shape[0])))
+        out = np.zeros((nb * n1, fo_pad), np.float32)
+        by_j: Dict[int, List[TilePlan]] = {}
+        for tp in self._block_order(lp):
+            by_j.setdefault(tp.out_j, []).append(tp)
+        order = [j for j in rl["shard_order"] if j in by_j]
+
+        def build(j):
+            return {"h": h_in[j * n1:(j + 1) * n1]}
+
+        def compute(j, staged):
+            pending = []
+            for tp in by_j[j]:
+                i = tp.out_i
+                acc = jnp.zeros((n1, n2), jnp.float32)
+                for ins in tp.compute:       # GEMM steps: args=(j, k, i)
+                    k = ins.args[1]
+                    h_tile = jax.lax.dynamic_slice(
+                        staged["h"], (0, k * n2), (n1, n2))
+                    w_tile = jax.lax.dynamic_slice(
+                        Wj, (k * n2, i * n2), (n2, n2))
+                    acc = self.ack.gemm(h_tile, w_tile, acc)
+                    self.stats.tile_ops += 1
+                if b is not None:
+                    acc = acc + jax.lax.dynamic_slice(b, (i * n2,), (n2,))
+                acc = self._epilogue(tp, meta, acc, weights,
+                                     i * n2, (i + 1) * n2)
+
+                def write(a, i=i, j=j):
+                    out[j * n1:(j + 1) * n1, i * n2:(i + 1) * n2] = a
+                pending.append((write, acc))
+            return pending
+
+        self._stream_shards(order, build, compute)
+        return out
+
+    # ------------------------------------------------------------------ #
+    def _host_vadd(self, lp, meta, pg, xa, xb, weights, rl) -> np.ndarray:
+        n1, n2, nb = pg.config.n1, pg.config.n2, pg.n_blocks
+        alpha, beta = meta["alpha"], meta["beta"]
+        fi_pad = max(xa.shape[1], xb.shape[1])
+        out = np.zeros((nb * n1, fi_pad), np.float32)
+        by_j: Dict[int, List[TilePlan]] = {}
+        for tp in self._block_order(lp):
+            by_j.setdefault(tp.out_j, []).append(tp)
+        order = [j for j in rl["shard_order"] if j in by_j]
+
+        def build(j):
+            return {"a": xa[j * n1:(j + 1) * n1],
+                    "b": xb[j * n1:(j + 1) * n1]}
+
+        def compute(j, staged):
+            pending = []
+            for tp in by_j[j]:
+                i = tp.out_i
+                ta = jax.lax.dynamic_slice(staged["a"], (0, i * n2),
+                                           (n1, n2))
+                tc = jax.lax.dynamic_slice(staged["b"], (0, i * n2),
+                                           (n1, n2))
+                v = self.ack.vadd(ta, tc, alpha, beta)
+                self.stats.tile_ops += 1
+                v = self._epilogue(tp, meta, v, weights,
+                                   i * n2, (i + 1) * n2)
+
+                def write(a, i=i, j=j):
+                    out[j * n1:(j + 1) * n1, i * n2:(i + 1) * n2] = a
+                pending.append((write, v))
+            return pending
+
+        self._stream_shards(order, build, compute)
+        return out
+
+    # ------------------------------------------------------------------ #
+    def _host_vertex_act(self, lp, meta, pg, h_in, weights,
+                         rl) -> np.ndarray:
+        n1, n2, nb = pg.config.n1, pg.config.n2, pg.n_blocks
+        fi_pad = ((max(lp.f_in, 1) + n2 - 1) // n2) * n2
+        out = np.zeros((nb * n1, fi_pad), np.float32)
+        by_j: Dict[int, List[TilePlan]] = {}
+        for tp in self._block_order(lp):
+            by_j.setdefault(tp.out_j, []).append(tp)
+        order = [j for j in rl["shard_order"] if j in by_j]
+        if lp.layer_type == LayerType.BATCHNORM:
+            mu, sig, gam, bet = (
+                np.asarray(weights[meta[k]], np.float32)
+                for k in ("mu", "sigma", "gamma", "beta"))
+            eps = float(meta.get("eps", 1e-5))
+            sc = gam / np.sqrt(sig ** 2 + eps)
+            sh = bet - mu * sc
+            sc = np.pad(sc, (0, fi_pad - sc.shape[0]))
+            sh = np.pad(sh, (0, fi_pad - sh.shape[0]))
+
+        def build(j):
+            return {"h": h_in[j * n1:(j + 1) * n1]}
+
+        def compute(j, staged):
+            pending = []
+            for tp in by_j[j]:
+                i = tp.out_i
+                v = jax.lax.dynamic_slice(staged["h"], (0, i * n2),
+                                          (n1, n2))
+                op = tp.compute[0]           # the ACT / AFFINE instr
+                if lp.layer_type == LayerType.BATCHNORM:
+                    v = self.ack.affine(
+                        v, jnp.asarray(sc[i * n2:(i + 1) * n2]),
+                        jnp.asarray(sh[i * n2:(i + 1) * n2]))
+                else:
+                    v = self.ack.act(v, Activation(op.act))
+                self.stats.tile_ops += 1
+
+                def write(a, i=i, j=j):
+                    out[j * n1:(j + 1) * n1, i * n2:(i + 1) * n2] = a
+                pending.append((write, v))
+            return pending
+
+        self._stream_shards(order, build, compute)
+        return out
+
+    # ------------------------------------------------------------------ #
+    def _host_vector_inner(self, lp, meta, pg, h_in, weights,
+                           rl) -> np.ndarray:
+        n1, n2 = pg.config.n1, pg.config.n2
+        pair = lp.mode == 1
+        ew_out = np.zeros((pg.n_edges + 1,), np.float32)
+        by_j: Dict[int, List[TilePlan]] = {}
+        for tp in self._block_order(lp):
+            by_j.setdefault(tp.out_j, []).append(tp)
+        order = [j for j in rl["shard_order"] if j in by_j]
+        srcs = rl["sources"]
+
+        def build(j):
+            arrs = {}
+            for k in srcs.get(str(j), []):
+                arrs[f"h{k}"] = h_in[k * n1:(k + 1) * n1]
+            for tp in by_j[j]:
+                tile = pg.tiles[(j, tp.tile_k)][tp.slice_id]
+                arrs[f"c{tp.tile_k}:{tp.slice_id}"] = tile.cols
+                arrs[f"m{tp.tile_k}:{tp.slice_id}"] = tile.edge_pos >= 0
+            return arrs
+
+        def compute(j, staged):
+            pending = []
+            for tp in by_j[j]:
+                k, s = tp.tile_k, tp.slice_id
+                cols = staged[f"c{k}:{s}"]
+                mask = staged[f"m{k}:{s}"]
+                acc = jnp.zeros(cols.shape, jnp.float32)
+                for ins in tp.compute:     # SDDMM steps: args=(j,k,i,s)
+                    i = ins.args[2]
+                    h_dst = jax.lax.dynamic_slice(
+                        staged[f"h{j}"], (0, i * n2), (n1, n2))
+                    h_src = jax.lax.dynamic_slice(
+                        staged[f"h{k}"], (0, i * n2), (n1, n2))
+                    acc = self.ack.sddmm(h_dst, h_src, cols, mask, acc,
+                                         pair_sum=pair)
+                    self.stats.tile_ops += 1
+                acc = self._epilogue(tp, meta, acc, weights, 0, n2)
+                tile = pg.tiles[(j, k)][s]
+
+                def write(a, tile=tile):
+                    mask_np = tile.edge_pos >= 0
+                    idx = np.where(mask_np, tile.edge_pos, pg.n_edges)
+                    ew_out[idx.ravel()] = a.ravel()
+                pending.append((write, acc))
+            return pending
+
+        self._stream_shards(order, build, compute)
+        return ew_out[: pg.n_edges]
+
+    # ------------------------------------------------------------------ #
+    def _host_edge_act(self, lp, pg, ew_in) -> np.ndarray:
+        """Edge activations on a host-resident (E,) score vector; the
+        softmax two-pass scheme stages each destination row's gathered
+        per-tile scores and runs the SAME jnp ops as the device path."""
+        act = Activation(lp.mode)
+        if act != Activation.EDGE_SOFTMAX:
+            out = np.asarray(apply_activation(jnp.asarray(ew_in), act))
+            self.stats.tile_ops += len(lp.tiles)
+            return out
+        n1 = pg.config.n1
+        nb = pg.n_blocks
+        ew_out = np.zeros((pg.n_edges + 1,), np.float32)
+        for j in range(nb):
+            row_tiles = [(k, s) for (jj, k), ts in sorted(pg.tiles.items())
+                         if jj == j for s in range(len(ts))]
+            if not row_tiles:
+                continue
+            arrs = {}
+            for k, s in row_tiles:
+                tile = pg.tiles[(j, k)][s]
+                arrs[f"s{k}:{s}"] = ew_in[np.maximum(tile.edge_pos, 0)]
+                arrs[f"m{k}:{s}"] = tile.edge_pos >= 0
+            staged, nbytes = self._stage(arrs)
+            self.stats.peak_stage_bytes = max(
+                self.stats.peak_stage_bytes, nbytes)
+            if (self.resident_budget_bytes is not None
+                    and nbytes + self._static_bytes
+                    > self.resident_budget_bytes):
+                raise ResidentBudgetError(
+                    f"edge-softmax row working set ({nbytes} bytes + "
+                    f"{self._static_bytes} resident weights) exceeds "
+                    f"resident_budget_bytes={self.resident_budget_bytes}"
+                    f"; recompile with a smaller n1 / width_cap")
+            mx = jnp.full((n1,), -3.4e38, jnp.float32)
+            for k, s in row_tiles:
+                sc = jnp.where(staged[f"m{k}:{s}"], staged[f"s{k}:{s}"],
+                               -3.4e38)
+                mx = jnp.maximum(mx, jnp.max(sc, axis=1))
+            mx = jnp.where(mx <= -3.4e38, 0.0, mx)
+            den = jnp.zeros((n1,), jnp.float32)
+            exps = []
+            for k, s in row_tiles:
+                e = jnp.where(staged[f"m{k}:{s}"],
+                              jnp.exp(staged[f"s{k}:{s}"] - mx[:, None]),
+                              0.0)
+                den = den + jnp.sum(e, axis=1)
+                exps.append((k, s, e))
+                self.stats.tile_ops += 1
+            den = jnp.maximum(den, 1e-12)
+            for k, s, e in exps:
+                out_t = e / den[:, None]
+                tile = pg.tiles[(j, k)][s]
+                mask_np = tile.edge_pos >= 0
+                idx = np.where(mask_np, tile.edge_pos, pg.n_edges)
+                masked = jnp.where(staged[f"m{k}:{s}"], out_t, 0.0)
+                ew_out[idx.ravel()] = np.asarray(masked).ravel()
+            self.stats.shards_streamed += 1
+        return ew_out[: pg.n_edges]
 
     # ------------------------------------------------------------------ #
     def _epilogue(self, tp: TilePlan, meta: dict, tile: jnp.ndarray,

@@ -66,10 +66,12 @@ def _layer_manifest(model: ModelIR) -> Dict[str, Dict[str, Any]]:
 
 def build_manifest(program: Program, graph_name: str = "graph") -> dict:
     """Everything `engine.run` needs beyond the binary + arrays."""
+    from repro.core.passes.schedule import residency_schedule
     m, pg = program.model, program.pgraph
     sinks = [i for i, l in m.layers.items() if not l.child_ids]
     sink = sinks[-1] if sinks else m.topo_order()[-1]
     return {
+        "residency": residency_schedule(program),
         "format": MANIFEST_FORMAT,
         "version": MANIFEST_VERSION,
         "model_name": m.name,
@@ -105,6 +107,11 @@ class CompiledProgram:
     pgraph: PartitionedGraph
     t_loc: float = 0.0
     cache_key: str = ""
+    # Execution-mode default ("device" | "host") set by
+    # ``Engine.compile(residency=...)``; never serialized — a loaded
+    # program runs device-resident unless the caller asks otherwise.
+    default_residency: Optional[str] = dataclasses.field(
+        default=None, compare=False)
     source: Optional[Any] = dataclasses.field(
         default=None, repr=False, compare=False)
     _plan: Optional[Any] = dataclasses.field(

@@ -24,6 +24,7 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.configs import ARCHS, get_config  # noqa: E402
 from repro.distributed import sharding as SH  # noqa: E402
 from repro.distributed.zero import opt_state_specs  # noqa: E402
@@ -115,7 +116,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str,
     }
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if cell.kind == "train":
             fn = make_train_step(model, cfg)
             ospec = jax.eval_shape(adamw_init, param_s)
@@ -172,6 +173,8 @@ def run_cell(arch: str, shape: str, mesh_kind: str,
                              - mem.alias_size_in_bytes),
     }
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # old jax: list of per-device dicts
+        ca = ca[0] if ca else {}
     rec["xla_cost"] = {"flops": ca.get("flops", 0.0),
                        "bytes": ca.get("bytes accessed", 0.0)}
     t2 = time.time()

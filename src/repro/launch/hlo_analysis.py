@@ -349,8 +349,16 @@ def analyze(text: str, n_devices: int = 1) -> HloCosts:
                 res_elems = 1
                 for d in _shape_dims(ins.result):
                     res_elems *= d
-                lhs_shape = comp.shapes.get(ins.operands[0].split(" ")[0]
-                                            if ins.operands else "", "")
+                # Operands appear as "%name" or "f32[...] %name"; resolve
+                # the NAME against the computation's result shapes, and
+                # fall back to the inline type when the operand is
+                # written with one (cross-computation references).
+                lhs_shape = ""
+                if ins.operands:
+                    lhs_name = ins.operands[0].split(" ")[-1].lstrip("%")
+                    lhs_shape = comp.shapes.get(lhs_name, "")
+                    if not lhs_shape and "[" in ins.operands[0]:
+                        lhs_shape = ins.operands[0]
                 mm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}",
                                ins.line)
                 k = 1

@@ -59,11 +59,11 @@ def test_elastic_restore_resharded(tmp_path):
     code = f"""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import make_mesh
 from repro.checkpoint import save, restore
 t = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}}
 save({str(tmp_path)!r}, 3, t)
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 sh = {{"w": NamedSharding(mesh, P("data", "model"))}}
 t2, step, _ = restore({str(tmp_path)!r}, t, shardings=sh)
 assert step == 3
@@ -77,6 +77,7 @@ print("OK")
     assert "OK" in out.stdout
 
 
+@pytest.mark.slow          # two full training subprocesses
 def test_crash_restart_loss_continuity(tmp_path):
     """launch.train: crash at step 12, relaunch with --resume auto; the
     run completes and the data stream stays deterministic."""

@@ -45,6 +45,7 @@ def test_compression_roundtrip_and_error_feedback():
         np.asarray(newg["w"] + newef["w"]), np.asarray(g), atol=1e-5)
 
 
+@pytest.mark.slow          # 80 jitted train steps in a subprocess
 def test_compressed_training_converges():
     """int8+EF training tracks uncompressed loss on a tiny model."""
     code = """
@@ -93,13 +94,13 @@ def test_moe_a2a_matches_dense():
     code = """
     import jax, jax.numpy as jnp, numpy as np
     from repro.models import moe as MOE
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh, set_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     d, f, e, topk = 16, 32, 8, 2
     p = MOE.moe_init(jax.random.PRNGKey(0), d, f, e, jnp.float32, n_shared=1)
     x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (4, 8, d)).astype(np.float32))
     y_dense, aux_d = MOE.moe_dense(p, x, topk)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         y_a2a, aux_a = MOE.moe_a2a(p, x, topk, cap_factor=4.0, mesh=mesh)
     err = float(jnp.max(jnp.abs(y_dense - y_a2a)))
     print("ERR", err, float(aux_d), float(aux_a))
@@ -116,8 +117,8 @@ def test_zero_sharding_specs():
     import jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
     from repro.distributed.zero import opt_state_specs, zero_param_spec
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh, set_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     # plain leaf: first divisible dim gets 'data'
     s = zero_param_spec(P(None, "model"), (8, 16), mesh)
     assert s == P("data", "model"), s
@@ -130,6 +131,7 @@ def test_zero_sharding_specs():
     assert "OK" in out
 
 
+@pytest.mark.slow          # granite-8b pjit on an 8-device mesh
 def test_sharded_train_step_matches_single_device():
     """pjit on a 4x2 mesh == single-device math (same loss/params)."""
     code = """
@@ -146,9 +148,9 @@ def test_sharded_train_step_matches_single_device():
     batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (8, 32)).astype(np.int32)),
              "labels": jnp.asarray(rng.integers(0, cfg.vocab, (8, 32)).astype(np.int32))}
     p1, o1, m1 = jax.jit(ts)(params, opt, batch)
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    with jax.set_mesh(mesh):
+    from repro.compat import make_mesh, set_mesh
+    mesh = make_mesh((4, 2), ("data", "model"))
+    with set_mesh(mesh):
         psh = SH.param_shardings(mesh, params)
         bsh = {k: NamedSharding(mesh, P(("data",), None)) for k in batch}
         f = jax.jit(ts, in_shardings=(psh, None, bsh))
@@ -170,15 +172,15 @@ def test_pipeline_parallel_equivalence():
     code = """
     import jax, jax.numpy as jnp, numpy as np
     from repro.distributed.pipeline import pipeline_apply
-    mesh = jax.make_mesh((4,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh, set_mesh
+    mesh = make_mesh((4,), ("stage",))
     rng = np.random.default_rng(0)
     n_stages, n_micro, mb, d = 4, 8, 2, 16
     Ws = jnp.asarray(rng.normal(0, 0.5, (n_stages, d, d)).astype(np.float32))
     x = jnp.asarray(rng.normal(0, 1, (n_micro, mb, d)).astype(np.float32))
     def stage_fn(w, h):
         return jnp.tanh(h @ w)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         y_pipe = pipeline_apply(stage_fn, Ws, x, mesh, axis="stage")
     y_seq = x
     for s in range(n_stages):
@@ -197,15 +199,15 @@ def test_moe_local_matches_dense_decode():
     code = """
     import jax, jax.numpy as jnp, numpy as np
     from repro.models import moe as MOE
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh, set_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     d, f, e, topk = 16, 32, 8, 2
     p = MOE.moe_init(jax.random.PRNGKey(0), d, f, e, jnp.float32, n_shared=1)
     for b, t in [(4, 1), (8, 2)]:
         x = jnp.asarray(np.random.default_rng(b).normal(0, 1, (b, t, d))
                         .astype(np.float32))
         y_dense, _ = MOE.moe_dense(p, x, topk)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             y_loc, _ = MOE.moe_local(p, x, topk, cap_factor=4.0, mesh=mesh)
         err = float(jnp.max(jnp.abs(y_dense - y_loc)))
         assert err < 2e-4, (b, t, err)

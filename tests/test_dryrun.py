@@ -12,6 +12,7 @@ import pytest
 REPO = os.path.join(os.path.dirname(__file__), "..")
 
 
+@pytest.mark.slow          # 512-device lower+compile in a subprocess
 @pytest.mark.parametrize("mesh", ["single", "multi"])
 def test_run_cell_whisper_decode(mesh):
     env = dict(os.environ)

@@ -1,0 +1,234 @@
+"""Partition-centric out-of-core execution (paper §6.5, Algorithms 6-8).
+
+Covers the tentpole acceptance criteria:
+  * ``residency="host"`` (features host-resident, one destination
+    shard's working set staged on device at a time, double-buffered) is
+    BIT-identical to the device-resident path for GCN/SAGE/GAT on the
+    b1/b3/b6 fixtures;
+  * interval liveness actually frees: the peak number of concurrently
+    live padded outputs (counted through the executor's liveness hook)
+    is bounded by the residency table's live-set, strictly below "every
+    layer alive" on a deep model;
+  * the shard schedule round-trips through ``.gagi`` (and executing the
+    loaded bundle host-resident matches in-process device execution);
+  * ``resident_budget_bytes`` gates: the device path refuses a run whose
+    liveness-aware peak exceeds the budget, the streaming path completes
+    under the same budget with the same bits.
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core.passes.partition import PartitionConfig
+from repro.engine import Engine, ResidentBudgetError
+from repro.engine.executor import derive_residency
+
+GEOM = PartitionConfig(n1=32, n2=8)
+
+
+def _g(nv=90, ne=400, f=12, c=4, seed=0):
+    g = G.random_graph(nv, ne, seed=seed).gcn_normalized()
+    g.feat_dim, g.n_classes = f, c
+    return g
+
+
+def _engine(**kw) -> Engine:
+    return Engine(geometry=GEOM, n_pes=4, **kw)
+
+
+# --------------------------------------------------------------------------- #
+# Bit-exactness: streaming == resident, for GCN (b1), SAGE (b3), GAT (b6).
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", ["b1", "b3", "b6"])
+@pytest.mark.parametrize("gseed", [3, 21])
+def test_host_resident_is_bit_identical(name, gseed):
+    g = _g(seed=gseed)
+    x = jnp.asarray(G.random_features(g, seed=2))
+    eng = _engine()
+    prog = eng.compile(name, g)
+    y_dev = np.asarray(eng.run(prog, x))
+    y_host = np.asarray(eng.run(prog, x, residency="host"))
+    assert np.array_equal(y_dev, y_host)
+    # the streaming pass actually streamed (several shards staged)
+    assert eng.exec_stats.shards_streamed > 1
+    assert eng.exec_stats.h2d_bytes > 0
+
+
+def test_run_batch_host_matches_device():
+    g = _g(seed=7)
+    x = jnp.asarray(G.random_features(g, seed=4))
+    xs = jnp.stack([x, x * 0.5, x * -1.0])
+    eng = _engine()
+    prog = eng.compile("b1", g)
+    yd = np.asarray(eng.run_batch(prog, xs))
+    yh = np.asarray(eng.run_batch(prog, xs, residency="host"))
+    assert np.array_equal(yd, yh)
+
+
+def test_compile_residency_default_is_carried_not_cached():
+    g = _g(seed=9)
+    x = jnp.asarray(G.random_features(g, seed=1))
+    eng = _engine()
+    ph = eng.compile("b1", g, residency="host")
+    assert ph.default_residency == "host"
+    y_host = np.asarray(eng.run(ph, x))          # uses the host default
+    assert eng.exec_stats.shards_streamed > 0
+    # the shared cache entry keeps serving device-resident by default
+    pd = eng.compile("b1", g)
+    assert pd.default_residency is None
+    assert np.array_equal(np.asarray(eng.run(pd, x)), y_host)
+
+
+# --------------------------------------------------------------------------- #
+# Liveness: the manifest table is respected and outputs really free.
+# --------------------------------------------------------------------------- #
+def _expected_peak_live(prog) -> int:
+    res = prog.manifest["residency"]
+    last_use = {int(k): v for k, v in res["last_use"].items()}
+    plan = prog.plan()
+    n = len(plan.layers)
+    births = {lp.layer_id: t for t, lp in enumerate(plan.layers)}
+    return max(
+        sum(1 for lid, bt in births.items()
+            if bt <= t <= max(last_use.get(lid, n), bt))
+        for t in range(n))
+
+
+@pytest.mark.parametrize("residency", ["device", "host"])
+def test_liveness_frees_outputs(residency):
+    g = _g(seed=5)
+    x = jnp.asarray(G.random_features(g, seed=3))
+    eng = _engine()
+    prog = eng.compile("b8", g)        # deepest benchmark stack
+    events = []
+    eng._executor.liveness_hook = \
+        lambda ev, lid, live: events.append((ev, lid, live))
+    eng.run(prog, x, residency=residency)
+    expected = _expected_peak_live(prog)
+    n_layers = len(prog.plan().layers)
+    assert expected < n_layers         # the bound itself is non-trivial
+    assert eng.exec_stats.peak_live_outputs <= expected
+    frees = [e for e in events if e[0] == "free"]
+    allocs = [e for e in events if e[0] == "alloc"]
+    assert len(allocs) == n_layers
+    assert frees                       # something was actually released
+    # everything except the sink (and values still live at the end) is
+    # freed exactly once
+    freed = {lid for _, lid, _ in frees}
+    assert prog.manifest["sink"] not in freed
+
+
+# --------------------------------------------------------------------------- #
+# Manifest + .gagi round-trip of the shard schedule.
+# --------------------------------------------------------------------------- #
+def test_manifest_residency_shape():
+    g = _g(seed=11)
+    prog = _engine().compile("b6", g)
+    res = prog.manifest["residency"]
+    assert set(res) == {"last_use", "layers"}
+    plan = prog.plan()
+    for lp in plan.layers:
+        rl = res["layers"][str(lp.layer_id)]
+        # shard_order is a permutation of the shards that have sources
+        assert sorted(rl["shard_order"]) == sorted(
+            int(j) for j in rl["sources"])
+        for js, ks in rl["sources"].items():
+            assert all(0 <= k < prog.pgraph.n_blocks for k in ks)
+    # every consumed value appears in the liveness table, incl. input -1
+    assert "-1" in res["last_use"]
+
+
+def test_gagi_roundtrips_shard_schedule(tmp_path):
+    g = _g(seed=13)
+    x = jnp.asarray(G.random_features(g, seed=6))
+    eng = _engine()
+    prog = eng.compile("b6", g)
+    y_dev = np.asarray(eng.run(prog, x))
+    path = os.path.join(str(tmp_path), "gat.gagi")
+    prog.save(path)
+    loaded = _engine().load(path)
+    assert loaded.manifest["residency"] == prog.manifest["residency"]
+    y_host = np.asarray(_engine().run(loaded, x, residency="host"))
+    assert np.array_equal(y_dev, y_host)
+
+
+def test_pre_residency_bundle_falls_back_to_derivation(tmp_path):
+    """A .gagi written before manifests carried a residency section
+    still streams: the executor derives the schedule from the binary."""
+    g = _g(seed=17)
+    x = jnp.asarray(G.random_features(g, seed=8))
+    eng = _engine()
+    prog = eng.compile("b1", g)
+    y_dev = np.asarray(eng.run(prog, x))
+    path = os.path.join(str(tmp_path), "old.gagi")
+    prog.save(path)
+    loaded = _engine().load(path)
+    emitted = loaded.manifest.pop("residency")   # simulate an old bundle
+    fresh = _engine()
+    y_host = np.asarray(fresh.run(loaded, x, residency="host"))
+    assert np.array_equal(y_dev, y_host)
+    # and the derived schedule agrees with what the compiler emitted
+    derived = derive_residency(loaded.plan(), loaded.manifest["layers"])
+    assert derived == emitted
+
+
+# --------------------------------------------------------------------------- #
+# Budget: a point where only the partitioned path completes.
+# --------------------------------------------------------------------------- #
+def test_budget_gates_device_but_not_streaming():
+    g = _g(nv=400, ne=2400, seed=19)
+    x = jnp.asarray(G.random_features(g, seed=5))
+    eng = _engine()
+    prog = eng.compile("b1", g)
+    y_ref = np.asarray(eng.run(prog, x))
+    np.asarray(eng.run(prog, x, residency="host"))
+    host_peak = eng.exec_stats.peak_stage_bytes
+    est = eng._executor.estimate_device_peak_bytes(prog, x.shape[1])
+    assert host_peak < est             # streaming working set is smaller
+    eng.resident_budget_bytes = (host_peak + est) // 2
+    with pytest.raises(ResidentBudgetError):
+        eng.run(prog, x)
+    y_host = np.asarray(eng.run(prog, x, residency="host"))
+    assert np.array_equal(y_ref, y_host)
+
+
+def test_budget_gates_batched_device_runs_at_batch_scale():
+    """A budget that fits ONE lane must still refuse a vmapped batch
+    (and keep refusing on the memoized-executable replay path)."""
+    g = _g(seed=31)
+    x = jnp.asarray(G.random_features(g, seed=2))
+    eng = _engine()
+    prog = eng.compile("b1", g)
+    est1 = eng._executor.estimate_device_peak_bytes(prog, x.shape[1])
+    eng.resident_budget_bytes = est1 + 1
+    eng.run(prog, x)                             # one lane fits
+    xs = jnp.stack([x] * 8)
+    with pytest.raises(ResidentBudgetError):
+        eng.run_batch(prog, xs)
+    eng.resident_budget_bytes = None
+    eng.run_batch(prog, xs)                      # memoize the executable
+    eng.resident_budget_bytes = est1 + 1
+    with pytest.raises(ResidentBudgetError):     # replay is gated too
+        eng.run_batch(prog, xs)
+    eng.resident_budget_bytes = None
+
+
+def test_budget_rejects_oversized_shard_in_host_mode():
+    g = _g(seed=23)
+    x = jnp.asarray(G.random_features(g, seed=2))
+    eng = _engine(resident_budget_bytes=1024)    # absurdly small
+    prog = eng.compile("b1", g)
+    with pytest.raises(ResidentBudgetError):
+        eng.run(prog, x, residency="host")
+
+
+def test_graph_data_is_device_resident_only():
+    g = _g(seed=29)
+    x = jnp.asarray(G.random_features(g, seed=2))
+    eng = _engine()
+    prog = eng.compile("b1", g)
+    with pytest.raises(ValueError, match="device-resident"):
+        eng.run(prog, x, graph_data={"tiles": {}}, residency="host")

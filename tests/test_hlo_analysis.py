@@ -30,7 +30,10 @@ def test_scan_flops_are_trip_multiplied():
     xla = jax.jit(f).lower(
         jax.ShapeDtypeStruct((8, 64, 64), jnp.float32),
         jax.ShapeDtypeStruct((16, 64), jnp.float32)).compile()
-    assert (xla.cost_analysis() or {}).get("flops", 0) < 0.3 * c.flops
+    ca = xla.cost_analysis()   # dict (new jax) or list-of-dicts (old jax)
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    assert (ca or {}).get("flops", 0) < 0.3 * c.flops
 
 
 def test_nested_scan_multiplicity():
@@ -92,9 +95,9 @@ def test_collectives_counted():
     code = textwrap.dedent("""
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.compat import make_mesh
         from repro.launch.hlo_analysis import analyze
-        mesh = jax.make_mesh((8,), ("d",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("d",))
         def f(x):
             return (x @ x.T).sum()
         sh = NamedSharding(mesh, P(None, "d"))

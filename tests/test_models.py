@@ -101,6 +101,7 @@ def _decode_matches_forward(arch, b=2, t=12, tol=2e-4):
     assert err / ref < tol, (arch, err, ref)
 
 
+@pytest.mark.slow          # 10 archs x 12 positionwise decode steps
 @pytest.mark.parametrize("arch", ARCHS)
 def test_decode_matches_forward(arch):
     """KV caches / ring buffers / MLA absorption / SSM steps == the
