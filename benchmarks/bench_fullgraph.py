@@ -1,6 +1,8 @@
-"""Full-graph out-of-core benchmark: device-resident vs partition-centric.
+"""Full-graph out-of-core benchmark: device-resident vs partition-centric
+vs placement-scheduled multi-device.
 
   PYTHONPATH=src python benchmarks/bench_fullgraph.py [--smoke] [--full]
+                                                      [--devices N]
 
 The workload is full-graph inference (GCN b1 / SAGE b3 / GAT b6) on a
 power-law graph with community locality: vertex ids are assumed
@@ -10,24 +12,28 @@ deployed graphs — and the property the paper's fiber-shard partitioning
 exploits: a destination shard's working set is its (j, k) sub-shard
 tiles plus the FEW source sub-fibers they reference).
 
-Two execution modes over the SAME compiled binary, under the SAME
-``resident_budget_bytes``:
+Execution modes over the SAME compiled binary:
 
   * ``device`` — every padded layer output device-resident.  The
     executor prices the run with its liveness-aware peak estimate and
-    REFUSES when it exceeds the budget (recorded as the refusal).
+    REFUSES when it exceeds ``resident_budget_bytes`` (recorded as the
+    refusal, naming the first layer that busts the budget).
   * ``host``   — the partition-centric scheme (§6.5, Algorithms 6-8):
     features host-resident, one destination shard's working set staged
     at a time with double-buffered transfers.  Completes within budget
     and is bit-identical (asserted here at smoke size, tested at unit
     size in tests/test_fullgraph.py).
+  * ``mesh``   — with ``--devices N``: destination shards LPT-placed on
+    N (virtual host) devices, per-device shard schedules with halo
+    sub-fiber exchange; records the compile-time placement loads,
+    per-device load imbalance, and halo exchange volume.
 
 The budget is placed between the streaming window and the device peak,
 so the artifact shows a (graph size, budget) point where ONLY the
 partitioned path completes.  Results land in ``BENCH_fullgraph.json``:
 per-model device estimates (with and without interval liveness),
-streaming latency, peak staged bytes, H2D traffic, shard counts, plus
-seed/backend/CPU provenance.
+streaming latency, peak staged bytes, H2D traffic, shard counts, the
+placement/mesh figures, plus seed/backend/CPU/device provenance.
 
 Sizes: --smoke ~33k vertices (CI); default ~262k; --full ~1M vertices.
 """
@@ -41,30 +47,47 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
-
-try:                            # script: python benchmarks/bench_fullgraph.py
-    from common import provenance
-except ImportError:             # module: python -m benchmarks.bench_fullgraph
-    from benchmarks.common import provenance
-
-from repro.core import graph as G  # noqa: E402
-from repro.core.passes.partition import PartitionConfig  # noqa: E402
-from repro.engine import Engine, ResidentBudgetError  # noqa: E402
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 MODELS = ["b1", "b3", "b6"]     # GCN, GraphSAGE-mean, GAT
 
 
-def make_local_powerlaw(nv: int, ne: int, n1: int, seed: int) -> G.Graph:
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI size (~33k vertices)")
+    ap.add_argument("--full", action="store_true",
+                    help="~1M-vertex point (minutes on CPU)")
+    ap.add_argument("--out", default=os.path.join(ROOT,
+                                                  "BENCH_fullgraph.json"))
+    ap.add_argument("--seed", type=int, default=0,
+                    help="graph seed; recorded in provenance")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="run the placement-scheduled multi-device path "
+                         "on N devices (forces virtual host devices "
+                         "when fewer are physically present)")
+    return ap.parse_args(argv)
+
+
+def force_device_count(n: int) -> None:
+    """Must run BEFORE jax is imported: virtual host devices are an XLA
+    boot flag, not a runtime knob."""
+    if n > 1 and "jax" not in sys.modules:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = \
+                f"{flags} --xla_force_host_platform_device_count={n}".strip()
+
+
+def make_local_powerlaw(nv: int, ne: int, n1: int, seed: int):
     """Power-law degree profile + community locality: destination drawn
     with a heavy-tailed rank bias (hubs), source placed a geometric
     block-offset away — the post-reordering shape of real graphs.
     Duplicate draws are folded into one weighted edge (multi-edges are
     measurement artifacts; folding also keeps ELL tile widths honest)."""
+    from repro.core import graph as G
     rng = np.random.default_rng(seed)
     dst = (nv * rng.random(ne) ** 1.4).astype(np.int64)   # hub bias
     delta = rng.geometric(4.0 / n1, ne) * rng.choice((-1, 1), ne)
@@ -78,11 +101,12 @@ def make_local_powerlaw(nv: int, ne: int, n1: int, seed: int) -> G.Graph:
     return g.gcn_normalized()
 
 
-def run_model(name: str, eng: Engine, g: G.Graph, x,
-              reps: int, check_bits: bool) -> dict:
+def run_model(name: str, eng, g, x, reps: int, check_bits: bool,
+              devices: int) -> dict:
+    from repro.engine import ResidentBudgetError
     ex = eng._executor
     eng.resident_budget_bytes = None
-    prog = eng.compile(name, g)
+    prog = eng.compile(name, g, mesh=devices if devices > 1 else None)
     dev_peak = ex.estimate_device_peak_bytes(prog, x.shape[1])
     rec: dict = {
         "model": name,
@@ -92,6 +116,17 @@ def run_model(name: str, eng: Engine, g: G.Graph, x,
         "device_peak_bytes_naive": ex.estimate_device_peak_bytes(
             prog, x.shape[1], assume_liveness=False),
     }
+    if devices > 1:
+        # Compile-time placement figures: LPT loads over the mesh and
+        # the halo volume a targeted exchange would move per pass.
+        pl = prog.manifest["placement"]
+        mean = sum(pl["loads"]) / devices
+        rec["placement"] = {
+            "n_devices": devices,
+            "loads": pl["loads"],
+            "load_imbalance": (max(pl["loads"]) / mean) if mean else 1.0,
+            "halo_bytes_total": pl["halo_bytes_total"],
+        }
 
     # Warm-up streaming pass (jits the tile kernels) doubles as the
     # working-set probe: the measured double-buffered window + resident
@@ -100,6 +135,23 @@ def run_model(name: str, eng: Engine, g: G.Graph, x,
     window = ex.stats.peak_stage_bytes
     need = window + ex._static_bytes
     rec["host_window_bytes"] = window
+
+    if devices > 1:
+        t0 = time.perf_counter()
+        y_mesh = np.asarray(eng.run(prog, x, mesh=devices))
+        mesh_s = time.perf_counter() - t0
+        st = eng.exec_stats
+        rec["mesh"] = {
+            "latency_s": round(mesh_s, 4),
+            "bit_identical_to_host": bool(np.array_equal(y, y_mesh)),
+            "halo_bytes": st.halo_bytes,
+            "peak_device_bytes": st.peak_device_bytes,
+            "per_device_tile_ops": [d["tile_ops"]
+                                    for d in st.per_device],
+            "per_device_blocks": [d["blocks"] for d in st.per_device],
+            "tile_op_imbalance": round(st.device_imbalance, 4),
+        }
+
     if need >= dev_peak:
         # No gap (tiny graph / degenerate tiling): record and move on.
         rec["budget_bytes"] = None
@@ -148,12 +200,25 @@ def run_model(name: str, eng: Engine, g: G.Graph, x,
     return rec
 
 
-def main(mode: str, out_path: str, seed: int) -> None:
+def main(mode: str, out_path: str, seed: int, devices: int) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    try:                        # script: python benchmarks/bench_fullgraph.py
+        from common import provenance
+    except ImportError:         # module: python -m benchmarks.bench_fullgraph
+        from benchmarks.common import provenance
+
+    from repro.core import graph as G
+    from repro.core.passes.partition import PartitionConfig
+    from repro.engine import Engine
+
     nv, avg_deg, f, c, n1, reps = {
         "smoke": (1 << 15, 8, 32, 8, 2048, 2),
         "default": (1 << 18, 8, 64, 16, 8192, 1),
         "full": (1 << 20, 8, 64, 16, 8192, 1),
     }[mode]
+    devices = min(devices, jax.local_device_count())
     ne = nv * avg_deg
     t0 = time.perf_counter()
     g = make_local_powerlaw(nv, ne, n1, seed)
@@ -161,11 +226,12 @@ def main(mode: str, out_path: str, seed: int) -> None:
     x = jnp.asarray(G.random_features(g, seed=seed + 1))
     build_s = time.perf_counter() - t0
     print(f"graph: |V|={g.n_vertices:,} |E|={g.n_edges:,} f={f} "
-          f"({build_s:.1f}s to build)", flush=True)
+          f"({build_s:.1f}s to build), devices={devices}", flush=True)
 
     eng = Engine(geometry=PartitionConfig(n1=n1, n2=min(f, 128)))
     results = [run_model(m, eng, g, x, reps,
-                         check_bits=(mode == "smoke")) for m in MODELS]
+                         check_bits=(mode == "smoke"), devices=devices)
+               for m in MODELS]
     report = {
         "benchmark": "fullgraph_out_of_core",
         "mode": mode,
@@ -174,6 +240,9 @@ def main(mode: str, out_path: str, seed: int) -> None:
                   "generator": "localized_powerlaw"},
         "geometry": {"n1": n1, "n2": eng.geometry.n2,
                      "n_blocks": eng.geometry.n_blocks(g.n_vertices)},
+        "devices": {"requested": devices,
+                    "available": jax.local_device_count(),
+                    "mesh_axes": ["dev"] if devices > 1 else None},
         "models": results,
         "provenance": provenance(seed),
     }
@@ -189,15 +258,7 @@ def main(mode: str, out_path: str, seed: int) -> None:
 
 
 if __name__ == "__main__":
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="CI size (~33k vertices)")
-    ap.add_argument("--full", action="store_true",
-                    help="~1M-vertex point (minutes on CPU)")
-    ap.add_argument("--out", default=os.path.join(ROOT,
-                                                  "BENCH_fullgraph.json"))
-    ap.add_argument("--seed", type=int, default=0,
-                    help="graph seed; recorded in provenance")
-    args = ap.parse_args()
+    args = parse_args()
+    force_device_count(args.devices)     # before any jax import
     mode = "smoke" if args.smoke else ("full" if args.full else "default")
-    main(mode, args.out, args.seed)
+    main(mode, args.out, args.seed, args.devices)

@@ -119,6 +119,38 @@ class PartitionedGraph:
                 + len(set(sources)) * self.subfiber_bytes(f_pad))
 
 
+# --------------------------------------------------------------------------- #
+# Device-placement halo sets (multi-device partition-centric execution).
+#
+# When destination shards are placed on the devices of a mesh, each device
+# owns the output sub-fibers of its assigned row blocks.  For a given
+# layer, the *halo set* of a device is the set of source blocks its shards
+# gather from but it does not own — exactly the sub-fibers that must move
+# over the interconnect before the layer can run.  Computing the sets at
+# compile time makes the exchange volume a manifest fact, the software
+# analogue of the paper's compile-time data-movement plan.
+# --------------------------------------------------------------------------- #
+def halo_sets(assignment: List[int], sources: Dict[str, List[int]],
+              n_devices: int) -> List[List[int]]:
+    """Per-device halo sets for one layer.
+
+    ``assignment`` maps row block -> owning device (LPT output);
+    ``sources`` is the layer's residency table (destination shard ->
+    source blocks it gathers from, stringified keys as in the manifest).
+    Returns, per device, the sorted source blocks it needs but does not
+    own.  Layers whose shards only read their own row block (GEMM,
+    vector-add, activations) get empty halo sets.
+    """
+    owned: List[set] = [set() for _ in range(n_devices)]
+    for j, d in enumerate(assignment):
+        owned[d].add(j)
+    need: List[set] = [set() for _ in range(n_devices)]
+    for js, ks in sources.items():
+        d = assignment[int(js)]
+        need[d].update(int(k) for k in ks)
+    return [sorted(need[d] - owned[d]) for d in range(n_devices)]
+
+
 def partition_graph(g: Graph, cfg: PartitionConfig) -> PartitionedGraph:
     """COO -> fiber-shard blocked-ELL tiles.  O(|V| + |E|) (paper §8.1)."""
     n1 = cfg.n1

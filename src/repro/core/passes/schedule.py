@@ -164,6 +164,104 @@ def residency_schedule(prog: Program) -> dict:
     }
 
 
+# --------------------------------------------------------------------------- #
+# Placement schedule — the multi-device generalization of the residency
+# schedule.  "Where a shard runs" becomes a compiler output: destination
+# row blocks are LPT-assigned to the devices of a mesh (reusing
+# :func:`lpt_assign`, the same greedy rule that balances tiling blocks
+# over PEs), each device gets its own greedy max-overlap shard order, and
+# the per-device HALO sets (source sub-fibers a device gathers from but
+# does not own, :func:`repro.core.passes.partition.halo_sets`) are
+# recorded per layer so the exchange volume is known at compile time.
+# The whole structure is JSON-ready manifest data and round-trips
+# ``.gagi`` files; executors derive it from the binary for bundles
+# written before manifests carried a ``placement`` section (mirroring
+# ``derive_residency``).
+# --------------------------------------------------------------------------- #
+def shard_block_costs(layer_tiles, n_blocks: int) -> List[float]:
+    """Per-destination-row-block load estimate: the number of compute
+    instructions targeting the block, summed over all layers.
+
+    ``layer_tiles`` yields per-layer iterables of tiling blocks exposing
+    ``out_j`` and a compute-step count.  The metric is chosen so the
+    compiler (counting ``k_list`` reduction steps) and the binary
+    decoder (counting decoded compute instructions) agree EXACTLY,
+    which is what makes the derivation fallback reproduce the emitted
+    schedule bit-for-bit."""
+    costs = [0.0] * n_blocks
+    for tiles in layer_tiles:
+        for out_j, n_steps in tiles:
+            if out_j >= 0:
+                costs[out_j] += n_steps
+    return costs
+
+
+def build_placement(residency: dict, costs: Sequence[float],
+                    n_devices: int, n1: int, n2: int,
+                    f_in: Dict[str, int]) -> dict:
+    """Assemble the placement schedule from its ingredients.
+
+    Shared by :func:`placement_schedule` (compile time, costs from
+    TilingBlocks) and ``engine.executor.derive_placement`` (load time,
+    costs from the decoded binary) so both produce identical manifests
+    given identical inputs.  ``f_in`` maps stringified layer id -> input
+    feature width (sizes the halo sub-fibers of that layer)."""
+    from .partition import halo_sets
+    nb = len(costs)
+    assignment, loads = lpt_assign(costs, n_devices)
+    layers: Dict[str, dict] = {}
+    halo_total = 0
+    for lid, rl in residency["layers"].items():
+        sources = rl["sources"]
+        halos = halo_sets(assignment, sources, n_devices)
+        fp = ((max(int(f_in[lid]), 1) + n2 - 1) // n2) * n2
+        sub_bytes = n1 * fp * 4
+        order: Dict[str, List[int]] = {}
+        halo_bytes: Dict[str, int] = {}
+        for d in range(n_devices):
+            own = {int(j): set(int(k) for k in ks)
+                   for j, ks in sources.items()
+                   if assignment[int(j)] == d}
+            order[str(d)] = [int(j) for j in _order_shards(own)]
+            halo_bytes[str(d)] = len(halos[d]) * sub_bytes
+            halo_total += halo_bytes[str(d)]
+        layers[lid] = {
+            "order": order,
+            "halo": {str(d): [int(k) for k in halos[d]]
+                     for d in range(n_devices)},
+            "halo_bytes": halo_bytes,
+        }
+    return {
+        "n_devices": int(n_devices),
+        "assignment": [int(a) for a in assignment],
+        "loads": [float(l) for l in loads],
+        "halo_bytes_total": int(halo_total),
+        "layers": layers,
+    }
+
+
+def _tb_steps(tb) -> int:
+    """Compute-instruction count of a compiler TilingBlock — matches
+    ``len(TilePlan.compute)`` of the same block after decode."""
+    return (len(tb.k_list) if tb.kind in ("spdmm", "gemm", "sddmm")
+            else 1)
+
+
+def placement_schedule(prog: Program, n_devices: int,
+                       residency: Optional[dict] = None) -> dict:
+    """Shard -> device placement + per-device order + halo sets, as
+    JSON-ready manifest data (see :func:`build_placement`)."""
+    res = residency if residency is not None else residency_schedule(prog)
+    costs = shard_block_costs(
+        ([(tb.out_j, _tb_steps(tb)) for tb in lb.tiling_blocks]
+         for lb in prog.layer_blocks),
+        prog.pgraph.n_blocks)
+    f_in = {str(lb.layer_id): int(lb.layer.f_in)
+            for lb in prog.layer_blocks}
+    cfg = prog.pgraph.config
+    return build_placement(res, costs, n_devices, cfg.n1, cfg.n2, f_in)
+
+
 def run(prog: Program, n_pes: int = 8) -> ScheduleReport:
     """LPT-assign tiling blocks to PEs; annotate pe ids on instructions."""
     prog.n_pes = n_pes

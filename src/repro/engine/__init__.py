@@ -28,13 +28,16 @@ from .decoder import ExecutionPlan, LayerPlan, TilePlan, decode_binary
 from .engine import (Engine, EngineStats, InferenceRequest,
                      InferenceResponse, graph_signature, model_signature,
                      stack_features, stack_graph_data)
-from .executor import BinaryExecutor, ExecStats, ResidentBudgetError
+from .executor import (BinaryExecutor, ExecStats, ResidentBudgetError,
+                       derive_placement, derive_residency,
+                       ensure_placement)
 from .program import CompiledProgram, build_manifest, from_program
 
 __all__ = [
     "Engine", "EngineStats", "InferenceRequest", "InferenceResponse",
     "CompiledProgram", "BinaryExecutor", "ExecStats",
     "ResidentBudgetError", "LRUCache",
+    "derive_placement", "derive_residency", "ensure_placement",
     "ExecutionPlan", "LayerPlan", "TilePlan", "decode_binary",
     "build_manifest", "from_program", "graph_signature", "model_signature",
     "stack_features", "stack_graph_data",

@@ -44,10 +44,30 @@ from repro.core.ir import ModelIR
 from repro.core.passes.partition import PartitionConfig
 
 from .cache import LRUCache
-from .executor import BinaryExecutor, ExecStats
+from .executor import BinaryExecutor, ExecStats, ensure_placement
 from .program import CompiledProgram, from_program
 
 ModelSpec = Union[str, ModelIR]
+
+
+def _mesh_count(mesh) -> Optional[int]:
+    """Device count of the ``mesh`` knob (int, Mesh, or None) — what
+    ``compile`` needs to emit a placement schedule; no devices touched."""
+    if mesh is None:
+        return None
+    return int(mesh) if isinstance(mesh, int) else int(mesh.size)
+
+
+def _resolve_mesh(mesh):
+    """``mesh`` knob -> jax Mesh for execution.  Accepts ``None``, a
+    device count (int, builds the 1-D ``dev`` mesh over local devices),
+    or a prebuilt mesh from :mod:`repro.launch.mesh`."""
+    if mesh is None:
+        return None
+    if isinstance(mesh, int):
+        from repro.launch.mesh import make_device_mesh
+        mesh = make_device_mesh(mesh)
+    return mesh
 
 
 # --------------------------------------------------------------------------- #
@@ -263,7 +283,7 @@ class Engine:
     def compile(self, model: ModelSpec, graph: Graph, *, seed: int = 0,
                 order_opt: bool = True, fusion: bool = True,
                 use_cache: bool = True, residency: Optional[str] = None,
-                _key: Optional[str] = None) -> CompiledProgram:
+                mesh=None, _key: Optional[str] = None) -> CompiledProgram:
         """Model + graph -> CompiledProgram (through the §6 pipeline).
 
         ``model`` is a benchmark name ("b1".."b8", built with ``seed``) or
@@ -276,15 +296,25 @@ class Engine:
         one destination shard's working set to the device at a time
         (bit-identical results, bounded device footprint).  The returned
         handle carries the default; the shared cache entry is unchanged.
+
+        ``mesh`` (a device count or a mesh from
+        ``repro.launch.mesh.make_device_mesh``) records the placement
+        schedule — per-device shard orders + halo sets for that many
+        devices — in the program manifest, so it round-trips ``.gagi``.
+        Programs compiled without it still run on a mesh: the executor
+        derives an identical schedule from the binary.
         """
         if residency not in (None, "device", "host"):
             raise ValueError(f"residency must be 'device' or 'host', "
                              f"got {residency!r}")
+        n_devices = _mesh_count(mesh)
         key = _key or self.cache_key(model, graph, seed=seed,
                                      order_opt=order_opt, fusion=fusion)
         if use_cache:
             cached = self.cache.get(key)
             if cached is not None:
+                if n_devices is not None:
+                    ensure_placement(cached, n_devices)
                 if residency is not None:
                     return dataclasses.replace(
                         cached, default_residency=residency)
@@ -297,7 +327,7 @@ class Engine:
         cr = run_pipeline(model_ir, graph, opts)
         prog = from_program(cr.program, binary=cr.binary, t_loc=cr.t_loc,
                             cache_key=key, graph_name=graph.name,
-                            source=cr)
+                            source=cr, n_devices=n_devices)
         if residency is not None:
             prog = dataclasses.replace(prog, default_residency=residency)
         self.stats.compiles += 1
@@ -316,32 +346,42 @@ class Engine:
     def run(self, prog: CompiledProgram, x,
             weights: Optional[Dict[str, np.ndarray]] = None,
             graph_data: Optional[dict] = None,
-            residency: Optional[str] = None):
+            residency: Optional[str] = None, mesh=None):
         """Execute a compiled program by decoding its ISA binary.
 
         ``residency="host"`` streams the partition-centric out-of-core
         path (features host-resident, one shard's working set on device
         at a time); ``"device"`` keeps every padded layer output on
-        device.  Results are bit-identical; ``None`` uses the program's
-        compile-time default."""
+        device.  ``mesh`` (a device count or a prebuilt mesh) runs the
+        placement-scheduled multi-device path: each device executes its
+        assigned destination shards under ``shard_map``, exchanging halo
+        sub-fibers with collectives.  Results are bit-identical across
+        all three; ``None`` uses the program's compile-time default."""
         residency = residency or prog.default_residency or "device"
+        mesh = _resolve_mesh(mesh)
         return self._executor.run(prog, x, weights=weights,
                                   graph_data=graph_data,
-                                  residency=residency)
+                                  residency=residency, mesh=mesh)
 
     def run_batch(self, prog: CompiledProgram, xs,
                   weights: Optional[Dict[str, np.ndarray]] = None,
                   graph_data: Optional[dict] = None,
-                  residency: Optional[str] = None):
+                  residency: Optional[str] = None, mesh=None):
         """One binary pass for stacked ``[N, V, F]`` features -> [N, V, C].
         ``graph_data`` (stacked, leading batch axis) lets each lane carry
         its own topology over the same compiled program.  ``residency``
-        as in :meth:`run` ("host" runs lanes sequentially, each within
-        the device budget)."""
+        as in :meth:`run` ("host" interleaves the lanes per staged
+        shard, so each shard's tile working set ships once per batch —
+        note the staged window's sub-fiber half then scales with the
+        batch).  ``mesh`` as in :meth:`run`: lanes run as sequential
+        eager multi-device passes (tile kernels are cached, but there
+        is no whole-pass executable to replay — device-resident
+        batching is the throughput path)."""
         residency = residency or prog.default_residency or "device"
+        mesh = _resolve_mesh(mesh)
         return self._executor.run_batch(prog, xs, weights=weights,
                                         graph_data=graph_data,
-                                        residency=residency)
+                                        residency=residency, mesh=mesh)
 
     def load(self, path: str) -> CompiledProgram:
         """Load a ``.gagi`` bundle saved by ``CompiledProgram.save``."""

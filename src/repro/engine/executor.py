@@ -14,11 +14,27 @@ No in-memory ``Program``/``LayerIR`` objects appear on the hot path, so a
 one compiled in-process — the overlay contract: one fixed substrate, any
 (model, graph) pair, driven purely by its binary.
 
-Execution is layer by layer; within a layer, tiling blocks are issued in
-PE-interleaved order (round-robin across the PE streams the scheduler
-encoded into the instructions).  ``overlap=True`` dispatches tile ops
-asynchronously (the double-buffering analogue); ``overlap=False`` forces
-every tiling block to completion (Fig. 16 ablation baseline).
+Three execution paths share ONE shard-step abstraction (a per-layer
+:class:`_ShardKernel` computing tiles through an operand
+:class:`_OperandEnv`), so every path runs the same ACK kernels on the
+same values in the same per-tile order — which is what makes their
+results bit-identical:
+
+  * **device** — every padded layer output device-resident; tiles are
+    issued in PE-interleaved order straight off the resident arrays.
+  * **host** — the partition-centric out-of-core scheme (paper §6.5,
+    Algorithms 6-8): features host-resident, one destination shard's
+    working set staged at a time with double-buffered async transfers.
+    ``_run_host`` takes N feature *lanes* and interleaves them per
+    staged shard, so a batch amortizes each tile-working-set transfer.
+  * **mesh** — the placement-scheduled multi-device path: destination
+    shards are LPT-assigned to the devices of a mesh (the manifest's
+    ``placement`` section), each device executes its own greedy
+    max-overlap shard order under ``repro.compat.shard_map``, and halo
+    sub-fibers (source blocks a device does not own) move through an
+    ``all_gather`` collective before aggregation layers.  The
+    compile-time halo sets price the exchange; per-device counters land
+    in :class:`ExecStats`.
 
 Graph-as-data mode: ``run``/``run_batch`` accept an optional
 ``graph_data`` structure that *replaces the program's baked ELL tiles at
@@ -39,7 +55,7 @@ with a leading batch axis and vmapped together with the features, so N
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -67,12 +83,19 @@ def _tile_arrays(pg, gtiles, j: int, k: int, s: int):
     return d["cols"], d["vals"], d["mask"], d["epos"]
 
 
+def _row_tiles(pg, j: int) -> List[Tuple[int, int]]:
+    """The (k, slice) tiles of destination row block ``j``."""
+    return [(k, s) for (jj, k), ts in sorted(pg.tiles.items())
+            if jj == j for s in range(len(ts))]
+
+
 class ResidentBudgetError(RuntimeError):
     """Raised when an execution mode cannot honor ``resident_budget_bytes``.
 
     Device-resident runs raise it up front (from the liveness-aware peak
-    estimate); the partition-centric streaming path raises it only if a
-    single shard's double-buffered working set exceeds the budget."""
+    estimate, naming the first layer step that exceeds the budget); the
+    partition-centric streaming path raises it only if a single shard's
+    double-buffered working set exceeds the budget."""
 
 
 @dataclasses.dataclass
@@ -86,6 +109,11 @@ class ExecStats:
     shards_streamed: int = 0        # destination shards staged (host mode)
     h2d_bytes: int = 0              # bytes shipped host -> device
     peak_stage_bytes: int = 0       # double-buffered working set peak
+    # Multi-device placement telemetry (mesh mode).
+    n_devices: int = 1              # mesh size of the last run
+    halo_bytes: int = 0             # compile-time halo exchange volume
+    peak_device_bytes: int = 0      # est. per-device resident peak
+    per_device: Optional[List[dict]] = None  # {"device","tile_ops",...}
 
     def add(self, other: "ExecStats") -> None:
         self.tile_ops += other.tile_ops
@@ -93,17 +121,40 @@ class ExecStats:
         self.runs += other.runs
         self.shards_streamed += other.shards_streamed
         self.h2d_bytes += other.h2d_bytes
+        self.halo_bytes += other.halo_bytes
+        self.n_devices = max(self.n_devices, other.n_devices)
         self.peak_live_outputs = max(self.peak_live_outputs,
                                      other.peak_live_outputs)
         self.peak_live_bytes = max(self.peak_live_bytes,
                                    other.peak_live_bytes)
         self.peak_stage_bytes = max(self.peak_stage_bytes,
                                     other.peak_stage_bytes)
+        self.peak_device_bytes = max(self.peak_device_bytes,
+                                     other.peak_device_bytes)
+        if other.per_device is not None:
+            self.per_device = other.per_device
+
+    @property
+    def device_imbalance(self) -> float:
+        """max/mean per-device tile ops of the last mesh run (1.0 when
+        single-device or perfectly balanced)."""
+        if not self.per_device:
+            return 1.0
+        loads = [d["tile_ops"] for d in self.per_device]
+        mean = sum(loads) / len(loads)
+        return (max(loads) / mean) if mean > 0 else 1.0
 
 
 def _nbytes(a) -> int:
     """Array bytes; works for numpy arrays, jax arrays, and tracers."""
     return int(a.size) * a.dtype.itemsize
+
+
+def _nbytes_any(a) -> int:
+    """Bytes of an array OR a per-device list of arrays (mesh mode)."""
+    if isinstance(a, (list, tuple)):
+        return sum(_nbytes(x) for x in a)
+    return _nbytes(a)
 
 
 def _layer_out_bytes(lp: LayerPlan, pg) -> int:
@@ -163,6 +214,408 @@ def derive_residency(plan, lmeta: dict) -> dict:
             "layers": layers}
 
 
+def derive_placement(plan, residency: dict, geometry: dict,
+                     n_devices: int) -> dict:
+    """Rebuild the placement schedule from the decoded binary — the
+    fallback for ``.gagi`` bundles written before manifests carried a
+    ``placement`` section (or compiled for a different mesh size).
+    Uses the same LPT costs (compute-instruction counts per destination
+    row block) and the same :func:`build_placement` assembly as the
+    compiler pass, so the derived schedule is identical to what
+    ``placement_schedule`` would have emitted."""
+    from repro.core.passes.schedule import build_placement, shard_block_costs
+    costs = shard_block_costs(
+        ([(tp.out_j, len(tp.compute)) for tp in lp.tiles]
+         for lp in plan.layers),
+        int(geometry["n_blocks"]))
+    f_in = {str(lp.layer_id): int(lp.f_in) for lp in plan.layers}
+    return build_placement(residency, costs, n_devices,
+                           int(geometry["n1"]), int(geometry["n2"]), f_in)
+
+
+def resolve_residency(prog: CompiledProgram) -> dict:
+    """Manifest residency section, derived from the binary for
+    pre-residency ``.gagi`` bundles (cached on the program)."""
+    res = prog.manifest.get("residency")
+    if res is None:
+        res = prog.__dict__.get("_derived_residency")
+        if res is None:
+            res = derive_residency(prog.plan(), prog.manifest["layers"])
+            prog.__dict__["_derived_residency"] = res
+    return res
+
+
+def ensure_placement(prog: CompiledProgram, n_devices: int) -> dict:
+    """Manifest placement section for ``n_devices``, deriving one from
+    the decoded binary when the manifest lacks it (old bundles, or a
+    different mesh size than the program was compiled for).  The derived
+    schedule is attached to the manifest so a subsequent ``save``
+    serializes it and the round-trip cost is paid once."""
+    pl = prog.manifest.get("placement")
+    if pl is not None and int(pl.get("n_devices", 0)) == int(n_devices):
+        return pl
+    pl = derive_placement(prog.plan(), resolve_residency(prog),
+                          prog.manifest["geometry"], int(n_devices))
+    prog.manifest["placement"] = pl
+    return pl
+
+
+# --------------------------------------------------------------------------- #
+# Operand environments — where a tile's operands come FROM.
+#
+# A kernel's tile computation is identical on every path; only operand
+# residency differs.  Each environment answers the same five questions:
+# a feature tile of source block k / fiber i, a named vector-add operand
+# tile, a graph (ELL) tile, the per-edge dynamic weights of a tile, and
+# the inverse-degree slice of a destination block.
+# --------------------------------------------------------------------------- #
+class _DeviceEnv:
+    """Device-resident path: whole padded arrays live on device; tiles
+    come from the program (or runtime ``graph_data``)."""
+
+    def __init__(self, pg, gtiles, h=None, a=None, b=None, ew=None,
+                 inv_deg=None):
+        self.pg, self.gtiles = pg, gtiles
+        self.n1, self.n2 = pg.config.n1, pg.config.n2
+        self.h, self.a, self.b, self.ew, self.inv = h, a, b, ew, inv_deg
+
+    def h_tile(self, k: int, i: int):
+        return jax.lax.dynamic_slice(
+            self.h, (k * self.n1, i * self.n2), (self.n1, self.n2))
+
+    def operand_tile(self, which: str, j: int, i: int):
+        arr = self.a if which == "a" else self.b
+        return jax.lax.dynamic_slice(
+            arr, (j * self.n1, i * self.n2), (self.n1, self.n2))
+
+    def graph_tile(self, j: int, k: int, s: int):
+        return _tile_arrays(self.pg, self.gtiles, j, k, s)
+
+    def edge_weight_tile(self, j: int, k: int, s: int):
+        _, _, mask, epos = self.graph_tile(j, k, s)
+        return jnp.where(mask, self.ew[jnp.maximum(epos, 0)], 0.0)
+
+    def inv_deg_tile(self, j: int):
+        return jax.lax.dynamic_slice(self.inv, (j * self.n1,), (self.n1,))
+
+
+class _HostEnv:
+    """Host-streaming path: operands come from the staged working set of
+    the CURRENT destination shard.  Per-lane arrays carry an ``l<n>:``
+    prefix so N batch lanes share one staged tile set."""
+
+    def __init__(self, pg, staged: Dict[str, Any], lane: int):
+        self.n1, self.n2 = pg.config.n1, pg.config.n2
+        self.staged, self.pre = staged, f"l{lane}:"
+
+    def h_tile(self, k: int, i: int):
+        return jax.lax.dynamic_slice(
+            self.staged[f"{self.pre}h{k}"], (0, i * self.n2),
+            (self.n1, self.n2))
+
+    def operand_tile(self, which: str, j: int, i: int):
+        return jax.lax.dynamic_slice(
+            self.staged[f"{self.pre}{which}{j}"], (0, i * self.n2),
+            (self.n1, self.n2))
+
+    def graph_tile(self, j: int, k: int, s: int):
+        return (self.staged[f"c{k}:{s}"], self.staged.get(f"v{k}:{s}"),
+                self.staged[f"m{k}:{s}"], None)
+
+    def edge_weight_tile(self, j: int, k: int, s: int):
+        return jnp.where(self.staged[f"m{k}:{s}"],
+                         self.staged[f"{self.pre}e{k}:{s}"], 0.0)
+
+    def inv_deg_tile(self, j: int):
+        return self.staged["deg"]
+
+
+class _MeshEnv:
+    """Multi-device path: operands are device-local placement slabs
+    ``[B*n1, f]`` (B = row blocks per device), plus — for layers with a
+    non-empty halo — the ``all_gather``ed ``[D, B*n1, f]`` view.  Block
+    lookups go through the placement's block -> (device, slot) map with
+    STATIC indices, so each device's schedule traces to plain slices."""
+
+    def __init__(self, pg, place: Dict[int, Tuple[int, int]],
+                 gathered=None, local_h=None, a=None, b=None, ew=None):
+        self.pg, self.place = pg, place
+        self.n1, self.n2 = pg.config.n1, pg.config.n2
+        self.gathered, self.local_h = gathered, local_h
+        self.a, self.b, self.ew = a, b, ew
+
+    def _slab(self, k: int):
+        d, slot = self.place[k]
+        src = self.gathered[d] if self.gathered is not None \
+            else self.local_h
+        return src, slot
+
+    def h_tile(self, k: int, i: int):
+        src, slot = self._slab(k)
+        return src[slot * self.n1:(slot + 1) * self.n1,
+                   i * self.n2:(i + 1) * self.n2]
+
+    def operand_tile(self, which: str, j: int, i: int):
+        slot = self.place[j][1]
+        arr = self.a if which == "a" else self.b
+        return arr[slot * self.n1:(slot + 1) * self.n1,
+                   i * self.n2:(i + 1) * self.n2]
+
+    def graph_tile(self, j: int, k: int, s: int):
+        return _tile_arrays(self.pg, None, j, k, s)
+
+    def edge_weight_tile(self, j: int, k: int, s: int):
+        t = self.pg.tiles[(j, k)][s]
+        mask = t.edge_pos >= 0
+        return jnp.where(mask, self.ew[np.maximum(t.edge_pos, 0)], 0.0)
+
+    def inv_deg_tile(self, j: int):
+        return jnp.asarray(
+            self.pg.inv_in_degree[j * self.n1:(j + 1) * self.n1])
+
+
+# --------------------------------------------------------------------------- #
+# Shard kernels — ONE tile computation per layer family, shared by the
+# device-resident, host-streaming, and multi-device paths.  Each kernel
+# also knows its host-path staging recipe (``stage_shared`` arrays are
+# shipped once per shard, ``stage_lane`` once per batch lane) and its
+# host write-back, which is what lets ``_stream_shards`` drive every
+# layer type through the same build/compute/write shard steps.
+# --------------------------------------------------------------------------- #
+class _ShardKernel:
+    edge_valued = False
+
+    def __init__(self, ex, lp: LayerPlan, meta: dict, pg, weights):
+        self.ex, self.lp, self.meta, self.pg = ex, lp, meta, pg
+        self.weights = weights
+        self.n1, self.n2 = pg.config.n1, pg.config.n2
+
+    def _fp(self, f: int) -> int:
+        return ((max(f, 1) + self.n2 - 1) // self.n2) * self.n2
+
+    # -- host staging ---------------------------------------------------- #
+    def stage_shared(self, j: int, tps: List[TilePlan]) -> Dict[str, Any]:
+        return {}
+
+    def stage_lane(self, j: int, tps: List[TilePlan], io: dict,
+                   srcs: List[int]) -> Dict[str, Any]:
+        return {f"h{k}": io["h"][k * self.n1:(k + 1) * self.n1]
+                for k in srcs}
+
+    # -- outputs --------------------------------------------------------- #
+    def out_width(self, io: dict) -> int:
+        return self._fp(self.lp.f_in)
+
+    def new_host_out(self, io: dict) -> np.ndarray:
+        return np.zeros((self.pg.n_blocks * self.n1, self.out_width(io)),
+                        np.float32)
+
+    def host_write(self, out: np.ndarray, tp: TilePlan):
+        i, j, n1, n2 = tp.out_i, tp.out_j, self.n1, self.n2
+
+        def write(a, out=out, i=i, j=j):
+            out[j * n1:(j + 1) * n1, i * n2:(i + 1) * n2] = a
+        return write
+
+    # -- the shared tile computation ------------------------------------- #
+    def tile(self, tp: TilePlan, env):
+        raise NotImplementedError
+
+
+class _AggregateKernel(_ShardKernel):
+    """SpDMM-mode aggregation (paper Alg. 6): accumulate source
+    sub-fibers through a destination shard's ELL tiles."""
+
+    def __init__(self, ex, lp, meta, pg, weights):
+        super().__init__(ex, lp, meta, pg, weights)
+        self.op = {AggOp.SUM: "sum", AggOp.MEAN: "mean",
+                   AggOp.MAX: "max", AggOp.MIN: "min"}[AggOp(lp.mode)]
+        self.dyn = meta.get("edge_weight_layer") is not None
+        n1, n2 = self.n1, self.n2
+        self.init = (
+            jnp.full((n1, n2), -3.4e38, jnp.float32) if self.op == "max"
+            else jnp.full((n1, n2), 3.4e38, jnp.float32)
+            if self.op == "min" else jnp.zeros((n1, n2), jnp.float32))
+
+    def stage_shared(self, j, tps):
+        arrs: Dict[str, Any] = {}
+        for k in range(self.pg.n_blocks):
+            for s, t in enumerate(self.pg.tiles.get((j, k), [])):
+                arrs[f"c{k}:{s}"] = t.cols
+                arrs[f"v{k}:{s}"] = t.vals
+                arrs[f"m{k}:{s}"] = t.edge_pos >= 0
+        if self.op == "mean":
+            arrs["deg"] = np.asarray(
+                self.pg.inv_in_degree[j * self.n1:(j + 1) * self.n1])
+        return arrs
+
+    def stage_lane(self, j, tps, io, srcs):
+        arrs = super().stage_lane(j, tps, io, srcs)
+        if self.dyn:
+            ew = io["ew"]
+            for k in range(self.pg.n_blocks):
+                for s, t in enumerate(self.pg.tiles.get((j, k), [])):
+                    arrs[f"e{k}:{s}"] = ew[np.maximum(t.edge_pos, 0)]
+        return arrs
+
+    def tile(self, tp, env):
+        j, i, n2 = tp.out_j, tp.out_i, self.n2
+        acc = self.init
+        flag = jnp.zeros((self.n1,), bool)
+        for ins in tp.compute:           # SPDMM steps, stream order
+            k, ii = ins.args[1], ins.args[2]
+            s, dyn = ins.args[3] >> 1, ins.args[3] & 1
+            h_tile = env.h_tile(k, ii)
+            cols, v, mask, _ = env.graph_tile(j, k, s)
+            if dyn:
+                v = env.edge_weight_tile(j, k, s)
+            acc, flag = self.ex.ack.spdmm(h_tile, cols, v, mask, acc,
+                                          flag, self.op)
+            self.ex.stats.tile_ops += 1
+        if self.op in ("max", "min"):
+            acc = jnp.where(flag[:, None], acc, 0.0)
+        elif self.op == "mean":
+            acc = acc * env.inv_deg_tile(j)[:, None]
+        return self.ex._epilogue(tp, self.meta, acc, self.weights,
+                                 i * n2, (i + 1) * n2)
+
+
+class _LinearKernel(_ShardKernel):
+    """GEMM-mode dense layer: reduce over input fibers of the own row
+    block against weight blocks."""
+
+    def __init__(self, ex, lp, meta, pg, weights):
+        super().__init__(ex, lp, meta, pg, weights)
+        fi_pad, fo_pad = self._fp(lp.f_in), self._fp(lp.f_out)
+        W = np.zeros((fi_pad, fo_pad), np.float32)
+        W0 = np.asarray(weights[meta["W"]], np.float32)
+        W[: W0.shape[0], : W0.shape[1]] = W0
+        self.Wj = jnp.asarray(W)
+        self.b = None
+        if "b" in meta:
+            b0 = np.asarray(weights[meta["b"]], np.float32)
+            self.b = jnp.asarray(np.pad(b0, (0, fo_pad - b0.shape[0])))
+
+    def out_width(self, io):
+        return self._fp(self.lp.f_out)
+
+    def tile(self, tp, env):
+        i, j, n1, n2 = tp.out_i, tp.out_j, self.n1, self.n2
+        acc = jnp.zeros((n1, n2), jnp.float32)
+        for ins in tp.compute:           # GEMM steps: args=(j, k, i)
+            k = ins.args[1]
+            h_tile = env.h_tile(j, k)
+            w_tile = jax.lax.dynamic_slice(
+                self.Wj, (k * n2, i * n2), (n2, n2))
+            acc = self.ex.ack.gemm(h_tile, w_tile, acc)
+            self.ex.stats.tile_ops += 1
+        if self.b is not None:
+            acc = acc + jax.lax.dynamic_slice(self.b, (i * n2,), (n2,))
+        return self.ex._epilogue(tp, self.meta, acc, self.weights,
+                                 i * n2, (i + 1) * n2)
+
+
+class _VAddKernel(_ShardKernel):
+    """Vector-addition mode: elementwise alpha*a + beta*b per tile."""
+
+    def __init__(self, ex, lp, meta, pg, weights):
+        super().__init__(ex, lp, meta, pg, weights)
+        self.alpha, self.beta = meta["alpha"], meta["beta"]
+
+    def stage_lane(self, j, tps, io, srcs):
+        return {f"a{j}": io["a"][j * self.n1:(j + 1) * self.n1],
+                f"b{j}": io["b"][j * self.n1:(j + 1) * self.n1]}
+
+    def out_width(self, io):
+        return max(io["a"].shape[1], io["b"].shape[1])
+
+    def tile(self, tp, env):
+        i, j, n2 = tp.out_i, tp.out_j, self.n2
+        ta = env.operand_tile("a", j, i)
+        tb = env.operand_tile("b", j, i)
+        v = self.ex.ack.vadd(ta, tb, self.alpha, self.beta)
+        self.ex.stats.tile_ops += 1
+        return self.ex._epilogue(tp, self.meta, v, self.weights,
+                                 i * n2, (i + 1) * n2)
+
+
+class _VertexActKernel(_ShardKernel):
+    """Standalone vertex activation / batch-norm (Activation Unit)."""
+
+    def __init__(self, ex, lp, meta, pg, weights):
+        super().__init__(ex, lp, meta, pg, weights)
+        self.bn = lp.layer_type == LayerType.BATCHNORM
+        if self.bn:
+            mu, sig, gam, bet = (
+                np.asarray(weights[meta[k]], np.float32)
+                for k in ("mu", "sigma", "gamma", "beta"))
+            eps = float(meta.get("eps", 1e-5))
+            sc = gam / np.sqrt(sig ** 2 + eps)
+            sh = bet - mu * sc
+            fi_pad = self._fp(lp.f_in)
+            self.sc = np.pad(sc, (0, fi_pad - sc.shape[0]))
+            self.sh = np.pad(sh, (0, fi_pad - sh.shape[0]))
+
+    def tile(self, tp, env):
+        i, j, n2 = tp.out_i, tp.out_j, self.n2
+        v = env.h_tile(j, i)
+        op = tp.compute[0]               # the ACT / AFFINE instr
+        if self.bn:
+            v = self.ex.ack.affine(
+                v, jnp.asarray(self.sc[i * n2:(i + 1) * n2]),
+                jnp.asarray(self.sh[i * n2:(i + 1) * n2]))
+        else:
+            v = self.ex.ack.act(v, Activation(op.act))
+        self.ex.stats.tile_ops += 1
+        return v
+
+
+class _EdgeScoreKernel(_ShardKernel):
+    """SDDMM-mode edge scoring (paper Alg. 7): per-edge inner products
+    (or pair-sums) between destination and source sub-fibers."""
+
+    edge_valued = True
+
+    def __init__(self, ex, lp, meta, pg, weights):
+        super().__init__(ex, lp, meta, pg, weights)
+        self.pair = lp.mode == 1     # CSI mode bit — the binary decides
+
+    def stage_shared(self, j, tps):
+        arrs: Dict[str, Any] = {}
+        for tp in tps:
+            t = self.pg.tiles[(j, tp.tile_k)][tp.slice_id]
+            arrs[f"c{tp.tile_k}:{tp.slice_id}"] = t.cols
+            arrs[f"m{tp.tile_k}:{tp.slice_id}"] = t.edge_pos >= 0
+        return arrs
+
+    def new_host_out(self, io):
+        return np.zeros((self.pg.n_edges + 1,), np.float32)
+
+    def host_write(self, out, tp):
+        tile = self.pg.tiles[(tp.out_j, tp.tile_k)][tp.slice_id]
+        n_edges = self.pg.n_edges
+
+        def write(a, tile=tile, out=out):
+            mask_np = tile.edge_pos >= 0
+            idx = np.where(mask_np, tile.edge_pos, n_edges)
+            out[idx.ravel()] = a.ravel()
+        return write
+
+    def tile(self, tp, env):
+        j, k, s = tp.out_j, tp.tile_k, tp.slice_id
+        cols, _, mask, _ = env.graph_tile(j, k, s)
+        acc = jnp.zeros(cols.shape, jnp.float32)
+        for ins in tp.compute:           # SDDMM steps: args=(j, k, i, s)
+            i = ins.args[2]
+            h_dst = env.h_tile(j, i)
+            h_src = env.h_tile(k, i)
+            acc = self.ex.ack.sddmm(h_dst, h_src, cols, mask, acc,
+                                    pair_sum=self.pair)
+            self.ex.stats.tile_ops += 1
+        return self.ex._epilogue(tp, self.meta, acc, self.weights,
+                                 0, self.n2)
+
+
 class BinaryExecutor:
     """Executes a CompiledProgram by interpreting its decoded binary.
 
@@ -187,15 +640,54 @@ class BinaryExecutor:
 
     # ------------------------------------------------------------------ #
     def _residency(self, prog: CompiledProgram) -> dict:
-        """Manifest residency section, derived from the binary for
-        pre-residency ``.gagi`` bundles (cached on the program)."""
-        res = prog.manifest.get("residency")
-        if res is None:
-            res = prog.__dict__.get("_derived_residency")
-            if res is None:
-                res = derive_residency(prog.plan(), prog.manifest["layers"])
-                prog.__dict__["_derived_residency"] = res
-        return res
+        return resolve_residency(prog)
+
+    def _make_kernel(self, lp: LayerPlan, meta: dict, pg,
+                     weights) -> _ShardKernel:
+        lt = lp.layer_type
+        if lt == LayerType.AGGREGATE:
+            return _AggregateKernel(self, lp, meta, pg, weights)
+        if lt == LayerType.LINEAR:
+            return _LinearKernel(self, lp, meta, pg, weights)
+        if lt == LayerType.VECTOR_INNER:
+            return _EdgeScoreKernel(self, lp, meta, pg, weights)
+        if lt == LayerType.VECTOR_ADD:
+            return _VAddKernel(self, lp, meta, pg, weights)
+        if lt in (LayerType.ACTIVATION, LayerType.BATCHNORM):
+            return _VertexActKernel(self, lp, meta, pg, weights)
+        raise ValueError(lt)
+
+    # ------------------------------------------------------------------ #
+    def _live_profile(self, prog: CompiledProgram,
+                      x_cols: Optional[int] = None):
+        """(static bytes, input-feature bytes, per-step live-output
+        bytes) of a device-resident pass — the liveness-aware memory
+        profile both the peak estimate and the budget gate read."""
+        plan = prog.plan()
+        pg = prog.pgraph
+        n1, n2 = pg.config.n1, pg.config.n2
+        vp = pg.n_blocks * n1
+        res = self._residency(prog)
+        last_use = {int(k): v for k, v in res["last_use"].items()}
+        static = (pg.tile_bytes()
+                  + sum(_nbytes(np.asarray(w))
+                        for w in prog.weights.values())
+                  + _nbytes(np.asarray(pg.inv_in_degree)))
+        if not plan.layers:
+            return static, 0, []
+        fin_pad0 = ((max(plan.layers[0].f_in, 1) + n2 - 1) // n2) * n2
+        xw = fin_pad0 if x_cols is None else max(
+            fin_pad0, ((x_cols + n2 - 1) // n2) * n2)
+        x_bytes = vp * xw * 4   # kept for the whole pass in device mode
+        sizes = {lp.layer_id: _layer_out_bytes(lp, pg)
+                 for lp in plan.layers}
+        births = {lp.layer_id: t for t, lp in enumerate(plan.layers)}
+        n = len(plan.layers)
+        live = [sum(sz for lid, sz in sizes.items()
+                    if births[lid] <= t <= max(last_use.get(lid, n),
+                                               births[lid]))
+                for t in range(n)]
+        return static, x_bytes, live
 
     def estimate_device_peak_bytes(self, prog: CompiledProgram,
                                    x_cols: Optional[int] = None,
@@ -208,35 +700,44 @@ class BinaryExecutor:
         kept every layer's output alive for the whole pass.  ``batch``
         scales the per-lane parts (features + live outputs) for a
         vmapped ``run_batch`` pass; tiles/weights are broadcast."""
-        plan = prog.plan()
-        pg = prog.pgraph
-        n1, n2 = pg.config.n1, pg.config.n2
-        vp = pg.n_blocks * n1
-        res = self._residency(prog)
-        last_use = {int(k): v for k, v in res["last_use"].items()}
-        static = (pg.tile_bytes()
-                  + sum(_nbytes(np.asarray(w))
-                        for w in prog.weights.values())
-                  + _nbytes(np.asarray(pg.inv_in_degree)))
-        if not plan.layers:
+        static, x_bytes, live = self._live_profile(prog, x_cols)
+        if not live:
             return static
-        fin_pad0 = ((max(plan.layers[0].f_in, 1) + n2 - 1) // n2) * n2
-        xw = fin_pad0 if x_cols is None else max(
-            fin_pad0, ((x_cols + n2 - 1) // n2) * n2)
-        x_bytes = vp * xw * 4   # kept for the whole pass in device mode
-        sizes = {lp.layer_id: _layer_out_bytes(lp, pg)
-                 for lp in plan.layers}
-        births = {lp.layer_id: t for t, lp in enumerate(plan.layers)}
-        n = len(plan.layers)
         if not assume_liveness:
-            return static + batch * (x_bytes + sum(sizes.values()))
-        peak = 0
-        for t in range(n):
-            live = sum(sz for lid, sz in sizes.items()
-                       if births[lid] <= t <= max(last_use.get(lid, n),
-                                                  births[lid]))
-            peak = max(peak, live)
-        return static + batch * (x_bytes + peak)
+            total = sum(_layer_out_bytes(lp, prog.pgraph)
+                        for lp in prog.plan().layers)
+            return static + batch * (x_bytes + total)
+        return static + batch * (x_bytes + max(live))
+
+    def _gate_device_budget(self, prog: CompiledProgram,
+                            x_cols: Optional[int], batch: int = 1) -> None:
+        """Refuse a device-resident run whose liveness-aware peak
+        exceeds ``resident_budget_bytes`` — reporting the estimate, the
+        budget, the overshoot, and the FIRST layer step whose live set
+        pushes past the budget, so a refusal is actionable."""
+        if self.resident_budget_bytes is None:
+            return
+        budget = self.resident_budget_bytes
+        static, x_bytes, live = self._live_profile(prog, x_cols)
+        est = (static + batch * (x_bytes + max(live))) if live else static
+        if est <= budget:
+            return
+        detail = ""
+        over = [t for t, lv in enumerate(live)
+                if static + batch * (x_bytes + lv) > budget]
+        if over:
+            lp = prog.plan().layers[over[0]]
+            detail = (f"; first exceeded at layer {lp.layer_id} "
+                      f"({LayerType(lp.layer_type).name}, step "
+                      f"{over[0] + 1}/{len(live)})")
+        batch_note = f" for a batch of {batch}" if batch > 1 else ""
+        raise ResidentBudgetError(
+            f"device-resident execution needs ~{est} bytes "
+            f"(liveness-aware peak{batch_note}) but "
+            f"resident_budget_bytes={budget} ({est - budget} bytes over)"
+            f"{detail}; re-run with residency='host' to stream "
+            f"shard-by-shard" + (" or shrink the batch" if batch > 1
+                                 else ""))
 
     # ------------------------------------------------------------------ #
     def _watermark(self, event: str, layer_id: int, vals: Dict,
@@ -247,7 +748,7 @@ class BinaryExecutor:
                 self.stats.peak_live_outputs, live)
             self.stats.peak_live_bytes = max(
                 self.stats.peak_live_bytes,
-                sum(_nbytes(a) for d in (vals, edge_vals)
+                sum(_nbytes_any(a) for d in (vals, edge_vals)
                     for a in d.values()))
         if self.liveness_hook is not None:
             self.liveness_hook(event, layer_id, live)
@@ -262,27 +763,31 @@ class BinaryExecutor:
                 del d[lid]
                 self._watermark("free", lid, vals, edge_vals)
 
+    # ------------------------------------------------------------------ #
     def run(self, prog: CompiledProgram, x: jnp.ndarray,
             weights: Optional[Dict[str, np.ndarray]] = None,
             graph_data: Optional[dict] = None,
-            residency: str = "device") -> jnp.ndarray:
+            residency: str = "device", mesh=None) -> jnp.ndarray:
         if residency not in ("device", "host"):
             raise ValueError(f"residency must be 'device' or 'host', "
                              f"got {residency!r}")
+        if mesh is not None:
+            if graph_data is not None:
+                raise ValueError(
+                    "graph-as-data execution is device-resident only "
+                    "(bucketed subgraphs are small by construction)")
+            if residency == "host":
+                raise ValueError(
+                    "mesh execution already places shards across "
+                    "devices; residency='host' does not compose with it")
+            return self._run_mesh(prog, x, weights=weights, mesh=mesh)
         if residency == "host":
             if graph_data is not None:
                 raise ValueError(
                     "graph-as-data execution is device-resident only "
                     "(bucketed subgraphs are small by construction)")
-            return self._run_host(prog, x, weights)
-        if self.resident_budget_bytes is not None:
-            est = self.estimate_device_peak_bytes(prog, int(x.shape[1]))
-            if est > self.resident_budget_bytes:
-                raise ResidentBudgetError(
-                    f"device-resident execution needs ~{est} bytes "
-                    f"(liveness-aware peak) but resident_budget_bytes="
-                    f"{self.resident_budget_bytes}; re-run with "
-                    f"residency='host' to stream shard-by-shard")
+            return self._run_host(prog, [x], weights)[0]
+        self._gate_device_budget(prog, int(x.shape[1]))
         self.stats = ExecStats(runs=1)
         plan = prog.plan()
         man = prog.manifest
@@ -323,35 +828,42 @@ class BinaryExecutor:
                     else x_pad)
             lt = lp.layer_type
 
-            if lt == LayerType.AGGREGATE:
-                vals[lp.layer_id] = self._run_aggregate(
-                    lp, meta, pg, h_in, edge_vals, inv_deg, weights,
-                    gtiles)
-            elif lt == LayerType.LINEAR:
-                vals[lp.layer_id] = self._run_linear(
-                    lp, meta, pg, h_in, weights)
-            elif lt == LayerType.VECTOR_INNER:
-                edge_vals[lp.layer_id] = self._run_vector_inner(
-                    lp, meta, pg, h_in, weights, gtiles)
-            elif lt == LayerType.VECTOR_ADD:
-                a_id, b_id = meta["operands"]
-                xa = x_pad if a_id == -1 else vals[a_id]
-                xb = x_pad if b_id == -1 else vals[b_id]
-                vals[lp.layer_id] = self._run_vadd(
-                    lp, meta, pg, xa, xb, weights)
-            elif lt in (LayerType.ACTIVATION, LayerType.BATCHNORM):
-                if lp.on_edges:
-                    src = edge_vals[feat_parents[0]]
-                    edge_vals[lp.layer_id] = self._run_edge_act(
-                        lp, pg, src, gtiles)
-                else:
-                    vals[lp.layer_id] = self._run_vertex_act(
-                        lp, meta, pg, h_in, weights)
+            if lt in (LayerType.ACTIVATION, LayerType.BATCHNORM) \
+                    and lp.on_edges:
+                edge_vals[lp.layer_id] = self._run_edge_act(
+                    lp, pg, edge_vals[feat_parents[0]], gtiles)
             else:
-                raise ValueError(lt)
-            if not self.overlap:
-                tree = vals.get(lp.layer_id, edge_vals.get(lp.layer_id))
-                jax.block_until_ready(tree)
+                io = {"h": h_in,
+                      "ew": edge_vals.get(ewl) if ewl is not None
+                      else None}
+                if lt == LayerType.VECTOR_ADD:
+                    a_id, b_id = meta["operands"]
+                    io["a"] = x_pad if a_id == -1 else vals[a_id]
+                    io["b"] = x_pad if b_id == -1 else vals[b_id]
+                kern = self._make_kernel(lp, meta, pg, weights)
+                env = _DeviceEnv(pg, gtiles, h=io["h"], a=io.get("a"),
+                                 b=io.get("b"), ew=io["ew"],
+                                 inv_deg=inv_deg)
+                if kern.edge_valued:
+                    ew = jnp.zeros((pg.n_edges + 1,), jnp.float32)
+                    for tp in self._block_order(lp):
+                        acc = kern.tile(tp, env)
+                        _, _, mask, epos = env.graph_tile(
+                            tp.out_j, tp.tile_k, tp.slice_id)
+                        idx = jnp.where(mask, epos, pg.n_edges)
+                        ew = ew.at[idx.ravel()].set(acc.ravel())
+                        if not self.overlap:
+                            jax.block_until_ready(ew)
+                    edge_vals[lp.layer_id] = ew[: pg.n_edges]
+                else:
+                    out_tiles: Dict[Tuple[int, int], jnp.ndarray] = {}
+                    for tp in self._block_order(lp):
+                        v = kern.tile(tp, env)
+                        out_tiles[(tp.out_i, tp.out_j)] = v
+                        if not self.overlap:
+                            jax.block_until_ready(v)
+                    vals[lp.layer_id] = self._assemble(
+                        out_tiles, nb, kern.out_width(io) // n2)
             self._watermark("alloc", lp.layer_id, vals, edge_vals)
             # Interval liveness: drop outputs whose last consumer just
             # ran, so peak memory follows the live-set, not model depth.
@@ -364,7 +876,7 @@ class BinaryExecutor:
     def run_batch(self, prog: CompiledProgram, xs: jnp.ndarray,
                   weights: Optional[Dict[str, np.ndarray]] = None,
                   graph_data: Optional[dict] = None,
-                  residency: str = "device") -> jnp.ndarray:
+                  residency: str = "device", mesh=None) -> jnp.ndarray:
         """Execute ONE binary pass for a stacked ``[N, V, F]`` batch.
 
         The instruction stream is decoded and traversed once; every tile
@@ -387,34 +899,38 @@ class BinaryExecutor:
             raise ValueError(
                 f"run_batch expects stacked [N, V, F] features, got "
                 f"shape {tuple(xs.shape)}")
-        if residency == "host":
-            # Streaming mode trades latency for footprint: lanes run
-            # sequentially (each an independent shard-streamed pass) so
-            # the device never holds more than one working set.
+        if mesh is not None:
             if graph_data is not None:
                 raise ValueError(
                     "graph-as-data execution is device-resident only")
             batch = ExecStats()
             ys = []
-            for i in range(xs.shape[0]):
+            for i in range(int(xs.shape[0])):
                 ys.append(self.run(prog, xs[i], weights=weights,
-                                   residency="host"))
+                                   mesh=mesh))
                 batch.add(self.stats)
             batch.runs = 1                  # one logical batched pass
             self.stats = batch
             return jnp.stack(ys)
+        if residency == "host":
+            # Streaming mode trades latency for footprint: the batch
+            # lanes stream TOGETHER, interleaved per staged shard, so
+            # each destination shard's tile working set is shipped once
+            # for the whole batch (host-path batching).  The device
+            # still holds one double-buffered window, but its sub-fiber
+            # half now scales with the batch — a budget sized for
+            # single-lane streaming may need a smaller batch.
+            if graph_data is not None:
+                raise ValueError(
+                    "graph-as-data execution is device-resident only")
+            ys = self._run_host(
+                prog, [xs[i] for i in range(int(xs.shape[0]))], weights)
+            return jnp.stack(ys)
         # Budget-gate the vmapped pass at BATCH scale, on every call —
         # per-lane checks inside run() undercount by the batch factor,
         # and memoized replays never re-enter run() at all.
-        if self.resident_budget_bytes is not None:
-            est = self.estimate_device_peak_bytes(
-                prog, int(xs.shape[2]), batch=int(xs.shape[0]))
-            if est > self.resident_budget_bytes:
-                raise ResidentBudgetError(
-                    f"device-resident batch of {int(xs.shape[0])} needs "
-                    f"~{est} bytes (liveness-aware peak) but "
-                    f"resident_budget_bytes={self.resident_budget_bytes};"
-                    f" re-run with residency='host' or a smaller batch")
+        self._gate_device_budget(prog, int(xs.shape[2]),
+                                 batch=int(xs.shape[0]))
         if weights is not None:
             if graph_data is not None:
                 return jax.vmap(lambda x, gd: self.run(
@@ -451,8 +967,8 @@ class BinaryExecutor:
     # tiles plus the source sub-fibers they gather from — while the NEXT
     # shard's working set is already in flight (``jax.device_put`` is
     # async), the software analogue of the paper's double-buffered
-    # DDR<->BRAM overlap.  Every tile op runs through the same jitted
-    # ACK kernels on the same values in the same order as the
+    # DDR<->BRAM overlap.  Every tile op runs through the same shard
+    # kernels on the same values in the same order as the
     # device-resident path, so results are bit-identical.
     # ------------------------------------------------------------------ #
     def _stage(self, arrs: Dict[str, np.ndarray]):
@@ -486,19 +1002,28 @@ class BinaryExecutor:
             if (self.resident_budget_bytes is not None
                     and window + self._static_bytes
                     > self.resident_budget_bytes):
+                lanes = getattr(self, "_host_lanes", 1)
                 raise ResidentBudgetError(
                     f"shard working set ({window} bytes double-buffered "
                     f"+ {self._static_bytes} resident weights) exceeds "
                     f"resident_budget_bytes="
                     f"{self.resident_budget_bytes}; recompile with a "
-                    f"smaller n1 / width_cap")
+                    f"smaller n1 / width_cap"
+                    + (f" or shrink the batch (the staged window "
+                       f"carries {lanes} interleaved lanes)"
+                       if lanes > 1 else ""))
             for write, val in pending:
                 write(np.asarray(val))          # D2H; blocks shard j only
             self.stats.shards_streamed += 1
 
-    def _run_host(self, prog: CompiledProgram, x,
+    def _run_host(self, prog: CompiledProgram, xs: List[Any],
                   weights: Optional[Dict[str, np.ndarray]] = None
-                  ) -> jnp.ndarray:
+                  ) -> List[jnp.ndarray]:
+        """Stream ``len(xs)`` feature lanes through the partition-centric
+        path as ONE pass.  Lanes are interleaved per staged shard: the
+        shard's tile working set (``stage_shared``) ships host->device
+        once for the whole batch, each lane adds only its source
+        sub-fibers (``stage_lane``) — host-path batching."""
         self.stats = ExecStats(runs=1)
         plan = prog.plan()
         man = prog.manifest
@@ -513,14 +1038,19 @@ class BinaryExecutor:
         nv = pg.n_vertices
         sink = man["sink"]
         last_use = {int(k): v for k, v in res["last_use"].items()}
+        L = len(xs)
+        self._host_lanes = L    # budget refusals name the lane count
 
         fin_pad0 = ((max(plan.layers[0].f_in, 1) + n2 - 1) // n2) * n2
-        x_np = np.asarray(x, np.float32)
-        xw = max(fin_pad0, ((x_np.shape[1] + n2 - 1) // n2) * n2)
-        x_host = np.zeros((vp, xw), np.float32)
-        x_host[: x_np.shape[0], : x_np.shape[1]] = x_np
-        vals: Dict[int, np.ndarray] = {}       # layer -> padded output
-        edge_vals: Dict[int, np.ndarray] = {}  # layer -> (E,) edge scores
+        x_hosts: List[Optional[np.ndarray]] = []
+        for x in xs:
+            x_np = np.asarray(x, np.float32)
+            xw = max(fin_pad0, ((x_np.shape[1] + n2 - 1) // n2) * n2)
+            xh = np.zeros((vp, xw), np.float32)
+            xh[: x_np.shape[0], : x_np.shape[1]] = x_np
+            x_hosts.append(xh)
+        vals: List[Dict[int, np.ndarray]] = [{} for _ in range(L)]
+        edge_vals: List[Dict[int, np.ndarray]] = [{} for _ in range(L)]
 
         for t, lp in enumerate(plan.layers):
             meta = lmeta[str(lp.layer_id)]
@@ -528,317 +1058,130 @@ class BinaryExecutor:
             self.stats.layers += 1
             ewl = meta.get("edge_weight_layer")
             feat_parents = [p for p in meta["parents"] if p != ewl]
-            h_in = (vals.get(feat_parents[0], x_host) if feat_parents
-                    else x_host)
             lt = lp.layer_type
 
-            if lt == LayerType.AGGREGATE:
-                vals[lp.layer_id] = self._host_aggregate(
-                    lp, meta, pg, h_in, edge_vals, weights, rl)
-            elif lt == LayerType.LINEAR:
-                vals[lp.layer_id] = self._host_linear(
-                    lp, meta, pg, h_in, weights, rl)
-            elif lt == LayerType.VECTOR_INNER:
-                edge_vals[lp.layer_id] = self._host_vector_inner(
-                    lp, meta, pg, h_in, weights, rl)
-            elif lt == LayerType.VECTOR_ADD:
-                a_id, b_id = meta["operands"]
-                xa = x_host if a_id == -1 else vals[a_id]
-                xb = x_host if b_id == -1 else vals[b_id]
-                vals[lp.layer_id] = self._host_vadd(
-                    lp, meta, pg, xa, xb, weights, rl)
-            elif lt in (LayerType.ACTIVATION, LayerType.BATCHNORM):
-                if lp.on_edges:
-                    edge_vals[lp.layer_id] = self._host_edge_act(
-                        lp, pg, edge_vals[feat_parents[0]])
-                else:
-                    vals[lp.layer_id] = self._host_vertex_act(
-                        lp, meta, pg, h_in, weights, rl)
+            if lt in (LayerType.ACTIVATION, LayerType.BATCHNORM) \
+                    and lp.on_edges:
+                outs = self._host_edge_act(
+                    lp, pg, [edge_vals[ln][feat_parents[0]]
+                             for ln in range(L)])
+                for ln in range(L):
+                    edge_vals[ln][lp.layer_id] = outs[ln]
             else:
-                raise ValueError(lt)
-            self._watermark("alloc", lp.layer_id, vals, edge_vals)
-            self._free_dead(t, sink, last_use, vals, edge_vals)
+                kern = self._make_kernel(lp, meta, pg, weights)
+                by_j: Dict[int, List[TilePlan]] = {}
+                for tp in self._block_order(lp):
+                    by_j.setdefault(tp.out_j, []).append(tp)
+                order = [j for j in rl["shard_order"] if j in by_j]
+                srcs = rl["sources"]
+                ios = []
+                for ln in range(L):
+                    h_in = (vals[ln].get(feat_parents[0], x_hosts[ln])
+                            if feat_parents else x_hosts[ln])
+                    io = {"h": h_in,
+                          "ew": edge_vals[ln].get(ewl)
+                          if ewl is not None else None}
+                    if lt == LayerType.VECTOR_ADD:
+                        a_id, b_id = meta["operands"]
+                        io["a"] = (x_hosts[ln] if a_id == -1
+                                   else vals[ln][a_id])
+                        io["b"] = (x_hosts[ln] if b_id == -1
+                                   else vals[ln][b_id])
+                    ios.append(io)
+                outs = [kern.new_host_out(ios[ln]) for ln in range(L)]
+
+                def build(j, kern=kern, by_j=by_j, ios=ios, srcs=srcs):
+                    arrs = kern.stage_shared(j, by_j[j])
+                    for ln in range(L):
+                        lane = kern.stage_lane(j, by_j[j], ios[ln],
+                                               srcs.get(str(j), []))
+                        for name, a in lane.items():
+                            arrs[f"l{ln}:{name}"] = a
+                    return arrs
+
+                def compute(j, staged, kern=kern, by_j=by_j, outs=outs):
+                    pending = []
+                    for ln in range(L):
+                        env = _HostEnv(pg, staged, ln)
+                        for tp in by_j[j]:
+                            pending.append((kern.host_write(outs[ln], tp),
+                                            kern.tile(tp, env)))
+                    return pending
+
+                self._stream_shards(order, build, compute)
+                for ln in range(L):
+                    if kern.edge_valued:
+                        edge_vals[ln][lp.layer_id] = \
+                            outs[ln][: pg.n_edges]
+                    else:
+                        vals[ln][lp.layer_id] = outs[ln]
+            self._watermark("alloc", lp.layer_id, vals[0], edge_vals[0])
+            # Liveness hooks observe lane 0 only (one event per value,
+            # as in a single run); every lane still frees its outputs.
+            hook = self.liveness_hook
+            for ln in range(L):
+                self.liveness_hook = hook if ln == 0 else None
+                self._free_dead(t, sink, last_use, vals[ln],
+                                edge_vals[ln])
+            self.liveness_hook = hook
             if last_use.get(-1, -1) == t:
-                x_host = None          # input's last consumer has run
+                x_hosts = [None] * L   # input's last consumer has run
 
-        out = vals[sink][:nv, : man["sink_f_out"]]
+        ys = [jnp.asarray(vals[ln][sink][:nv, : man["sink_f_out"]])
+              for ln in range(L)]
         self.total.add(self.stats)
-        return jnp.asarray(out)
+        return ys
 
     # ------------------------------------------------------------------ #
-    def _host_aggregate(self, lp, meta, pg, h_in, edge_vals, weights,
-                        rl) -> np.ndarray:
-        n1, n2, nb = pg.config.n1, pg.config.n2, pg.n_blocks
-        nf = (max(lp.f_in, 1) + n2 - 1) // n2
-        op = {AggOp.SUM: "sum", AggOp.MEAN: "mean",
-              AggOp.MAX: "max", AggOp.MIN: "min"}[AggOp(lp.mode)]
-        ewl = meta.get("edge_weight_layer")
-        ew = edge_vals[ewl] if ewl is not None else None   # host (E,)
-        out = np.zeros((nb * n1, nf * n2), np.float32)
-        by_j: Dict[int, List[TilePlan]] = {}
-        for tp in self._block_order(lp):
-            by_j.setdefault(tp.out_j, []).append(tp)
-        order = [j for j in rl["shard_order"] if j in by_j]
-        srcs = rl["sources"]
-        init = (jnp.full((n1, n2), -3.4e38, jnp.float32) if op == "max" else
-                jnp.full((n1, n2), 3.4e38, jnp.float32) if op == "min" else
-                jnp.zeros((n1, n2), jnp.float32))
+    def _edge_softmax_rows(self, scored) -> List[jnp.ndarray]:
+        """Two-pass edge softmax over one destination row's tiles.
+        ``scored`` is [(raw scores [n1, w], mask)] — masked max, then
+        masked exp/sum, then per-tile normalized outputs (same order).
+        Shared by every execution path so the reduction order — and
+        therefore the bits — never depends on where tiles are resident."""
+        n1 = scored[0][0].shape[0]
+        mx = jnp.full((n1,), -3.4e38, jnp.float32)
+        for sc, mask in scored:
+            m = jnp.where(mask, sc, -3.4e38)
+            mx = jnp.maximum(mx, jnp.max(m, axis=1))
+        mx = jnp.where(mx <= -3.4e38, 0.0, mx)
+        den = jnp.zeros((n1,), jnp.float32)
+        exps = []
+        for sc, mask in scored:
+            e = jnp.where(mask, jnp.exp(sc - mx[:, None]), 0.0)
+            den = den + jnp.sum(e, axis=1)
+            exps.append(e)
+            self.stats.tile_ops += 1
+        den = jnp.maximum(den, 1e-12)
+        return [e / den[:, None] for e in exps]
 
-        def build(j):
-            arrs = {}
-            for k in srcs.get(str(j), []):
-                arrs[f"h{k}"] = h_in[k * n1:(k + 1) * n1]
-            for k in range(nb):
-                for s, tile in enumerate(pg.tiles.get((j, k), [])):
-                    arrs[f"c{k}:{s}"] = tile.cols
-                    arrs[f"v{k}:{s}"] = tile.vals
-                    arrs[f"m{k}:{s}"] = tile.edge_pos >= 0
-                    if ew is not None:
-                        arrs[f"e{k}:{s}"] = ew[np.maximum(tile.edge_pos,
-                                                          0)]
-            if op == "mean":
-                arrs["deg"] = np.asarray(
-                    pg.inv_in_degree[j * n1:(j + 1) * n1])
-            return arrs
-
-        def compute(j, staged):
-            pending = []
-            for tp in by_j[j]:
-                i = tp.out_i
-                acc = init
-                flag = jnp.zeros((n1,), bool)
-                for ins in tp.compute:       # SPDMM steps, stream order
-                    k, ii = ins.args[1], ins.args[2]
-                    s, dyn = ins.args[3] >> 1, ins.args[3] & 1
-                    h_tile = jax.lax.dynamic_slice(
-                        staged[f"h{k}"], (0, ii * n2), (n1, n2))
-                    cols, v, mask = (staged[f"c{k}:{s}"],
-                                     staged[f"v{k}:{s}"],
-                                     staged[f"m{k}:{s}"])
-                    if dyn:
-                        v = jnp.where(mask, staged[f"e{k}:{s}"], 0.0)
-                    acc, flag = self.ack.spdmm(h_tile, cols, v, mask,
-                                               acc, flag, op)
-                    self.stats.tile_ops += 1
-                if op in ("max", "min"):
-                    acc = jnp.where(flag[:, None], acc, 0.0)
-                elif op == "mean":
-                    acc = acc * staged["deg"][:, None]
-                acc = self._epilogue(tp, meta, acc, weights,
-                                     i * n2, (i + 1) * n2)
-
-                def write(a, i=i, j=j):
-                    out[j * n1:(j + 1) * n1, i * n2:(i + 1) * n2] = a
-                pending.append((write, acc))
-            return pending
-
-        self._stream_shards(order, build, compute)
-        return out
-
-    # ------------------------------------------------------------------ #
-    def _host_linear(self, lp, meta, pg, h_in, weights, rl) -> np.ndarray:
-        n1, n2, nb = pg.config.n1, pg.config.n2, pg.n_blocks
-        fi_pad = ((max(lp.f_in, 1) + n2 - 1) // n2) * n2
-        fo_pad = ((max(lp.f_out, 1) + n2 - 1) // n2) * n2
-        W = np.zeros((fi_pad, fo_pad), np.float32)
-        W0 = np.asarray(weights[meta["W"]], np.float32)
-        W[: W0.shape[0], : W0.shape[1]] = W0
-        Wj = jnp.asarray(W)
-        b = None
-        if "b" in meta:
-            b0 = np.asarray(weights[meta["b"]], np.float32)
-            b = jnp.asarray(np.pad(b0, (0, fo_pad - b0.shape[0])))
-        out = np.zeros((nb * n1, fo_pad), np.float32)
-        by_j: Dict[int, List[TilePlan]] = {}
-        for tp in self._block_order(lp):
-            by_j.setdefault(tp.out_j, []).append(tp)
-        order = [j for j in rl["shard_order"] if j in by_j]
-
-        def build(j):
-            return {"h": h_in[j * n1:(j + 1) * n1]}
-
-        def compute(j, staged):
-            pending = []
-            for tp in by_j[j]:
-                i = tp.out_i
-                acc = jnp.zeros((n1, n2), jnp.float32)
-                for ins in tp.compute:       # GEMM steps: args=(j, k, i)
-                    k = ins.args[1]
-                    h_tile = jax.lax.dynamic_slice(
-                        staged["h"], (0, k * n2), (n1, n2))
-                    w_tile = jax.lax.dynamic_slice(
-                        Wj, (k * n2, i * n2), (n2, n2))
-                    acc = self.ack.gemm(h_tile, w_tile, acc)
-                    self.stats.tile_ops += 1
-                if b is not None:
-                    acc = acc + jax.lax.dynamic_slice(b, (i * n2,), (n2,))
-                acc = self._epilogue(tp, meta, acc, weights,
-                                     i * n2, (i + 1) * n2)
-
-                def write(a, i=i, j=j):
-                    out[j * n1:(j + 1) * n1, i * n2:(i + 1) * n2] = a
-                pending.append((write, acc))
-            return pending
-
-        self._stream_shards(order, build, compute)
-        return out
-
-    # ------------------------------------------------------------------ #
-    def _host_vadd(self, lp, meta, pg, xa, xb, weights, rl) -> np.ndarray:
-        n1, n2, nb = pg.config.n1, pg.config.n2, pg.n_blocks
-        alpha, beta = meta["alpha"], meta["beta"]
-        fi_pad = max(xa.shape[1], xb.shape[1])
-        out = np.zeros((nb * n1, fi_pad), np.float32)
-        by_j: Dict[int, List[TilePlan]] = {}
-        for tp in self._block_order(lp):
-            by_j.setdefault(tp.out_j, []).append(tp)
-        order = [j for j in rl["shard_order"] if j in by_j]
-
-        def build(j):
-            return {"a": xa[j * n1:(j + 1) * n1],
-                    "b": xb[j * n1:(j + 1) * n1]}
-
-        def compute(j, staged):
-            pending = []
-            for tp in by_j[j]:
-                i = tp.out_i
-                ta = jax.lax.dynamic_slice(staged["a"], (0, i * n2),
-                                           (n1, n2))
-                tc = jax.lax.dynamic_slice(staged["b"], (0, i * n2),
-                                           (n1, n2))
-                v = self.ack.vadd(ta, tc, alpha, beta)
-                self.stats.tile_ops += 1
-                v = self._epilogue(tp, meta, v, weights,
-                                   i * n2, (i + 1) * n2)
-
-                def write(a, i=i, j=j):
-                    out[j * n1:(j + 1) * n1, i * n2:(i + 1) * n2] = a
-                pending.append((write, v))
-            return pending
-
-        self._stream_shards(order, build, compute)
-        return out
-
-    # ------------------------------------------------------------------ #
-    def _host_vertex_act(self, lp, meta, pg, h_in, weights,
-                         rl) -> np.ndarray:
-        n1, n2, nb = pg.config.n1, pg.config.n2, pg.n_blocks
-        fi_pad = ((max(lp.f_in, 1) + n2 - 1) // n2) * n2
-        out = np.zeros((nb * n1, fi_pad), np.float32)
-        by_j: Dict[int, List[TilePlan]] = {}
-        for tp in self._block_order(lp):
-            by_j.setdefault(tp.out_j, []).append(tp)
-        order = [j for j in rl["shard_order"] if j in by_j]
-        if lp.layer_type == LayerType.BATCHNORM:
-            mu, sig, gam, bet = (
-                np.asarray(weights[meta[k]], np.float32)
-                for k in ("mu", "sigma", "gamma", "beta"))
-            eps = float(meta.get("eps", 1e-5))
-            sc = gam / np.sqrt(sig ** 2 + eps)
-            sh = bet - mu * sc
-            sc = np.pad(sc, (0, fi_pad - sc.shape[0]))
-            sh = np.pad(sh, (0, fi_pad - sh.shape[0]))
-
-        def build(j):
-            return {"h": h_in[j * n1:(j + 1) * n1]}
-
-        def compute(j, staged):
-            pending = []
-            for tp in by_j[j]:
-                i = tp.out_i
-                v = jax.lax.dynamic_slice(staged["h"], (0, i * n2),
-                                          (n1, n2))
-                op = tp.compute[0]           # the ACT / AFFINE instr
-                if lp.layer_type == LayerType.BATCHNORM:
-                    v = self.ack.affine(
-                        v, jnp.asarray(sc[i * n2:(i + 1) * n2]),
-                        jnp.asarray(sh[i * n2:(i + 1) * n2]))
-                else:
-                    v = self.ack.act(v, Activation(op.act))
-                self.stats.tile_ops += 1
-
-                def write(a, i=i, j=j):
-                    out[j * n1:(j + 1) * n1, i * n2:(i + 1) * n2] = a
-                pending.append((write, v))
-            return pending
-
-        self._stream_shards(order, build, compute)
-        return out
-
-    # ------------------------------------------------------------------ #
-    def _host_vector_inner(self, lp, meta, pg, h_in, weights,
-                           rl) -> np.ndarray:
-        n1, n2 = pg.config.n1, pg.config.n2
-        pair = lp.mode == 1
-        ew_out = np.zeros((pg.n_edges + 1,), np.float32)
-        by_j: Dict[int, List[TilePlan]] = {}
-        for tp in self._block_order(lp):
-            by_j.setdefault(tp.out_j, []).append(tp)
-        order = [j for j in rl["shard_order"] if j in by_j]
-        srcs = rl["sources"]
-
-        def build(j):
-            arrs = {}
-            for k in srcs.get(str(j), []):
-                arrs[f"h{k}"] = h_in[k * n1:(k + 1) * n1]
-            for tp in by_j[j]:
-                tile = pg.tiles[(j, tp.tile_k)][tp.slice_id]
-                arrs[f"c{tp.tile_k}:{tp.slice_id}"] = tile.cols
-                arrs[f"m{tp.tile_k}:{tp.slice_id}"] = tile.edge_pos >= 0
-            return arrs
-
-        def compute(j, staged):
-            pending = []
-            for tp in by_j[j]:
-                k, s = tp.tile_k, tp.slice_id
-                cols = staged[f"c{k}:{s}"]
-                mask = staged[f"m{k}:{s}"]
-                acc = jnp.zeros(cols.shape, jnp.float32)
-                for ins in tp.compute:     # SDDMM steps: args=(j,k,i,s)
-                    i = ins.args[2]
-                    h_dst = jax.lax.dynamic_slice(
-                        staged[f"h{j}"], (0, i * n2), (n1, n2))
-                    h_src = jax.lax.dynamic_slice(
-                        staged[f"h{k}"], (0, i * n2), (n1, n2))
-                    acc = self.ack.sddmm(h_dst, h_src, cols, mask, acc,
-                                         pair_sum=pair)
-                    self.stats.tile_ops += 1
-                acc = self._epilogue(tp, meta, acc, weights, 0, n2)
-                tile = pg.tiles[(j, k)][s]
-
-                def write(a, tile=tile):
-                    mask_np = tile.edge_pos >= 0
-                    idx = np.where(mask_np, tile.edge_pos, pg.n_edges)
-                    ew_out[idx.ravel()] = a.ravel()
-                pending.append((write, acc))
-            return pending
-
-        self._stream_shards(order, build, compute)
-        return ew_out[: pg.n_edges]
-
-    # ------------------------------------------------------------------ #
-    def _host_edge_act(self, lp, pg, ew_in) -> np.ndarray:
-        """Edge activations on a host-resident (E,) score vector; the
-        softmax two-pass scheme stages each destination row's gathered
-        per-tile scores and runs the SAME jnp ops as the device path."""
+    def _host_edge_act(self, lp, pg, ews: List[np.ndarray]
+                       ) -> List[np.ndarray]:
+        """Edge activations on host-resident (E,) score vectors, one per
+        batch lane; the softmax two-pass scheme stages each destination
+        row's masks ONCE plus per-lane gathered scores and runs the SAME
+        shared row math as the device path."""
         act = Activation(lp.mode)
+        L = len(ews)
         if act != Activation.EDGE_SOFTMAX:
-            out = np.asarray(apply_activation(jnp.asarray(ew_in), act))
-            self.stats.tile_ops += len(lp.tiles)
-            return out
+            self.stats.tile_ops += len(lp.tiles) * L
+            return [np.asarray(apply_activation(jnp.asarray(ew), act))
+                    for ew in ews]
         n1 = pg.config.n1
         nb = pg.n_blocks
-        ew_out = np.zeros((pg.n_edges + 1,), np.float32)
+        outs = [np.zeros((pg.n_edges + 1,), np.float32)
+                for _ in range(L)]
         for j in range(nb):
-            row_tiles = [(k, s) for (jj, k), ts in sorted(pg.tiles.items())
-                         if jj == j for s in range(len(ts))]
+            row_tiles = _row_tiles(pg, j)
             if not row_tiles:
                 continue
             arrs = {}
             for k, s in row_tiles:
                 tile = pg.tiles[(j, k)][s]
-                arrs[f"s{k}:{s}"] = ew_in[np.maximum(tile.edge_pos, 0)]
                 arrs[f"m{k}:{s}"] = tile.edge_pos >= 0
+                for ln in range(L):
+                    arrs[f"l{ln}:s{k}:{s}"] = \
+                        ews[ln][np.maximum(tile.edge_pos, 0)]
             staged, nbytes = self._stage(arrs)
             self.stats.peak_stage_bytes = max(
                 self.stats.peak_stage_bytes, nbytes)
@@ -850,31 +1193,273 @@ class BinaryExecutor:
                     f"{self._static_bytes} resident weights) exceeds "
                     f"resident_budget_bytes={self.resident_budget_bytes}"
                     f"; recompile with a smaller n1 / width_cap")
-            mx = jnp.full((n1,), -3.4e38, jnp.float32)
-            for k, s in row_tiles:
-                sc = jnp.where(staged[f"m{k}:{s}"], staged[f"s{k}:{s}"],
-                               -3.4e38)
-                mx = jnp.maximum(mx, jnp.max(sc, axis=1))
-            mx = jnp.where(mx <= -3.4e38, 0.0, mx)
-            den = jnp.zeros((n1,), jnp.float32)
-            exps = []
-            for k, s in row_tiles:
-                e = jnp.where(staged[f"m{k}:{s}"],
-                              jnp.exp(staged[f"s{k}:{s}"] - mx[:, None]),
-                              0.0)
-                den = den + jnp.sum(e, axis=1)
-                exps.append((k, s, e))
-                self.stats.tile_ops += 1
-            den = jnp.maximum(den, 1e-12)
-            for k, s, e in exps:
-                out_t = e / den[:, None]
-                tile = pg.tiles[(j, k)][s]
-                mask_np = tile.edge_pos >= 0
-                idx = np.where(mask_np, tile.edge_pos, pg.n_edges)
-                masked = jnp.where(staged[f"m{k}:{s}"], out_t, 0.0)
-                ew_out[idx.ravel()] = np.asarray(masked).ravel()
+            for ln in range(L):
+                scored = [(staged[f"l{ln}:s{k}:{s}"],
+                           staged[f"m{k}:{s}"]) for k, s in row_tiles]
+                normed = self._edge_softmax_rows(scored)
+                for (k, s), out_t in zip(row_tiles, normed):
+                    tile = pg.tiles[(j, k)][s]
+                    mask_np = tile.edge_pos >= 0
+                    idx = np.where(mask_np, tile.edge_pos, pg.n_edges)
+                    masked = jnp.where(staged[f"m{k}:{s}"], out_t, 0.0)
+                    outs[ln][idx.ravel()] = np.asarray(masked).ravel()
             self.stats.shards_streamed += 1
-        return ew_out[: pg.n_edges]
+        return [o[: pg.n_edges] for o in outs]
+
+    # ------------------------------------------------------------------ #
+    # Multi-device placement execution.
+    #
+    # The manifest's placement schedule assigns destination row blocks
+    # to the devices of a 1-D mesh; features live block-permuted as one
+    # committed [B*n1, f] slab per device (B = row blocks per device).
+    # Each layer: (1) if the layer's halo sets are non-empty, the parent
+    # slabs are exchanged with an ``all_gather`` collective under
+    # ``repro.compat.shard_map`` — the halo-exchange step, priced at
+    # compile time by the placement's halo sets; (2) every device then
+    # executes ITS OWN greedy max-overlap shard order, dispatching the
+    # same jitted ACK tile kernels as the single-device path on its
+    # committed operands (eager ops run where their operands live).
+    # Because each tile op is the identical cached kernel on identical
+    # values in the identical order, results are BIT-identical to the
+    # single-device executor — the same property the host-streaming
+    # path relies on.
+    # ------------------------------------------------------------------ #
+    def _mesh_exchange(self, slabs, mesh, axis, devs, width: int):
+        """Halo exchange: per-device slabs -> a gathered ``[D, B*n1, f]``
+        view committed to every device, via a ``shard_map`` all_gather
+        over the mesh axis."""
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        from repro.compat import shard_map as _shard_map
+
+        D = len(slabs)
+        rows = int(slabs[0].shape[0])
+        global_x = jax.make_array_from_single_device_arrays(
+            (D * rows, width), NamedSharding(mesh, P(axis)), list(slabs))
+        fn = _shard_map(lambda v: jax.lax.all_gather(v, axis),
+                        mesh=mesh, in_specs=P(axis), out_specs=P(),
+                        check_vma=False)
+        gathered = fn(global_x)          # [D, rows, f], replicated
+        return [jax.device_put(gathered, d) for d in devs]
+
+    def _run_mesh(self, prog: CompiledProgram, x,
+                  weights: Optional[Dict[str, np.ndarray]] = None,
+                  mesh=None) -> jnp.ndarray:
+        axis = mesh.axis_names[0]
+        D = int(mesh.size)
+        devs = list(np.asarray(mesh.devices).reshape(-1))
+        pl = ensure_placement(prog, D)
+        plan = prog.plan()
+        man = prog.manifest
+        pg = prog.pgraph
+        res = self._residency(prog)
+        last_use = {int(k): v for k, v in res["last_use"].items()}
+        wts = weights if weights is not None else prog.weights
+        lmeta = man["layers"]
+        n1, n2, nb = pg.config.n1, pg.config.n2, pg.n_blocks
+        nv = pg.n_vertices
+        sink = man["sink"]
+        n_edges = pg.n_edges
+
+        assignment = pl["assignment"]
+        owned: List[List[int]] = [[] for _ in range(D)]
+        for j, d in enumerate(assignment):
+            owned[d].append(j)
+        B = max(1, max((len(o) for o in owned), default=1))
+        place = {j: (d, s) for d in range(D)
+                 for s, j in enumerate(owned[d])}
+
+        def f_pad(f: int) -> int:
+            return ((max(f, 1) + n2 - 1) // n2) * n2
+
+        fin_pad0 = f_pad(plan.layers[0].f_in)
+        x_np = np.asarray(x, np.float32)
+        xw = max(fin_pad0, ((x_np.shape[1] + n2 - 1) // n2) * n2)
+        x_slabs: Optional[List[Any]] = []
+        for d in range(D):
+            slab = np.zeros((B * n1, xw), np.float32)
+            for s, j in enumerate(owned[d]):
+                blk = x_np[j * n1: (j + 1) * n1]
+                slab[s * n1:s * n1 + blk.shape[0], : blk.shape[1]] = blk
+            x_slabs.append(jax.device_put(slab, devs[d]))
+
+        self.stats = ExecStats(runs=1, n_devices=D)
+        per_dev = [{"device": d, "tile_ops": 0, "shards": 0,
+                    "halo_bytes": 0, "blocks": len(owned[d])}
+                   for d in range(D)]
+        peak_dev = 0
+        vals: Dict[int, List[Any]] = {}       # layer -> per-device slabs
+        edge_vals: Dict[int, List[Any]] = {}  # layer -> per-device (E+1,)
+
+        for t, lp in enumerate(plan.layers):
+            meta = lmeta[str(lp.layer_id)]
+            self.stats.layers += 1
+            ewl = meta.get("edge_weight_layer")
+            feat_parents = [p for p in meta["parents"] if p != ewl]
+            lt = lp.layer_type
+            pll = pl["layers"][str(lp.layer_id)]
+            gath_bytes = 0
+
+            if lt in (LayerType.ACTIVATION, LayerType.BATCHNORM) \
+                    and lp.on_edges:
+                edge_vals[lp.layer_id] = self._mesh_edge_act(
+                    lp, pg, edge_vals[feat_parents[0]], owned, per_dev)
+            else:
+                kern = self._make_kernel(lp, meta, pg, wts)
+                by_j: Dict[int, List[TilePlan]] = {}
+                for tp in self._block_order(lp):
+                    by_j.setdefault(tp.out_j, []).append(tp)
+                parents = (vals.get(feat_parents[0], x_slabs)
+                           if feat_parents else x_slabs)
+                gather = (lt in (LayerType.AGGREGATE,
+                                 LayerType.VECTOR_INNER)
+                          and any(pll["halo"][str(d)]
+                                  for d in range(D)))
+                gathered = None
+                if gather:
+                    width = int(parents[0].shape[1])
+                    gathered = self._mesh_exchange(parents, mesh, axis,
+                                                   devs, width)
+                    gath_bytes = D * B * n1 * width * 4
+                    for d in range(D):
+                        per_dev[d]["halo_bytes"] += \
+                            pll["halo_bytes"].get(str(d), 0)
+                if lt == LayerType.VECTOR_ADD:
+                    a_id, b_id = meta["operands"]
+                    ops_a = x_slabs if a_id == -1 else vals[a_id]
+                    ops_b = x_slabs if b_id == -1 else vals[b_id]
+                    io_w = {"a": ops_a[0], "b": ops_b[0]}
+                else:
+                    ops_a = ops_b = None
+                    io_w = {}
+                width_out = (None if kern.edge_valued
+                             else kern.out_width(io_w))
+                nf = None if width_out is None else width_out // n2
+                outs: List[Any] = []
+                for d in range(D):
+                    before = self.stats.tile_ops
+                    env = _MeshEnv(
+                        pg, place,
+                        gathered=gathered[d] if gather else None,
+                        local_h=parents[d],
+                        a=ops_a[d] if ops_a is not None else None,
+                        b=ops_b[d] if ops_b is not None else None,
+                        ew=edge_vals[ewl][d] if ewl is not None
+                        else None)
+                    order = [j for j in pll["order"][str(d)]
+                             if j in by_j]
+                    seen = set(order)
+                    order += [j for j in owned[d]
+                              if j in by_j and j not in seen]
+                    if kern.edge_valued:
+                        ew = jnp.zeros((n_edges + 1,), jnp.float32)
+                        ew = jax.device_put(ew, devs[d])
+                        for j in order:
+                            for tp in by_j[j]:
+                                acc = kern.tile(tp, env)
+                                tile = pg.tiles[(j, tp.tile_k)][
+                                    tp.slice_id]
+                                mask_np = tile.edge_pos >= 0
+                                idx = np.where(mask_np, tile.edge_pos,
+                                               n_edges)
+                                ew = ew.at[idx.ravel()].set(acc.ravel())
+                            per_dev[d]["shards"] += 1
+                        outs.append(ew)
+                    else:
+                        tiles_out: Dict[Tuple[int, int], Any] = {}
+                        for j in order:
+                            for tp in by_j[j]:
+                                tiles_out[(tp.out_i, tp.out_j)] = \
+                                    kern.tile(tp, env)
+                            per_dev[d]["shards"] += 1
+                        rows = []
+                        for s in range(B):
+                            jj = (owned[d][s] if s < len(owned[d])
+                                  else -1)
+                            if jj >= 0 and jj in by_j:
+                                rows.append(jnp.concatenate(
+                                    [tiles_out[(i, jj)]
+                                     for i in range(nf)], axis=1))
+                            else:
+                                rows.append(jax.device_put(
+                                    jnp.zeros((n1, width_out),
+                                              jnp.float32), devs[d]))
+                        outs.append(jnp.concatenate(rows, axis=0))
+                    per_dev[d]["tile_ops"] += \
+                        self.stats.tile_ops - before
+                if kern.edge_valued:
+                    edge_vals[lp.layer_id] = outs
+                else:
+                    vals[lp.layer_id] = outs
+                if not self.overlap:
+                    jax.block_until_ready(outs)
+            live = sum(_nbytes_any(a) for dd in (vals, edge_vals)
+                       for a in dd.values())
+            peak_dev = max(peak_dev, live // D + gath_bytes)
+            self._watermark("alloc", lp.layer_id, vals, edge_vals)
+            self._free_dead(t, sink, last_use, vals, edge_vals)
+            if last_use.get(-1, -1) == t:
+                x_slabs = None         # input's last consumer has run
+
+        self.stats.per_device = per_dev
+        self.stats.halo_bytes = sum(d["halo_bytes"] for d in per_dev)
+        self.stats.peak_device_bytes = peak_dev
+        self.total.add(self.stats)
+        out = np.zeros((nb * n1, int(vals[sink][0].shape[1])),
+                       np.float32)
+        for j in range(nb):
+            d, s = place[j]
+            out[j * n1:(j + 1) * n1] = \
+                np.asarray(vals[sink][d][s * n1:(s + 1) * n1])
+        return jnp.asarray(out[:nv, : man["sink_f_out"]])
+
+    def _mesh_edge_act(self, lp, pg, ew_slabs, owned, per_dev):
+        """Edge activations on per-device ``(E+1,)`` score slabs.
+        Softmax rows are destination-local under the placement (a row's
+        tiles live with the device that owns the row block), so no
+        collective is needed — each device normalizes its own rows with
+        the shared two-pass row math."""
+        act = Activation(lp.mode)
+        D = len(ew_slabs)
+        n_edges = pg.n_edges
+        if act != Activation.EDGE_SOFTMAX:
+            # One op per tile, credited to the tile's owning device so
+            # sum(per_device tile_ops) == stats.tile_ops holds here too.
+            dev_of = {j: d for d in range(D) for j in owned[d]}
+            for tp in lp.tiles:
+                per_dev[dev_of[tp.out_j]]["tile_ops"] += 1
+            self.stats.tile_ops += len(lp.tiles)
+            return [apply_activation(ew_slabs[d], act)
+                    for d in range(D)]
+        outs = []
+        for d in range(D):
+            before = self.stats.tile_ops
+            ew_in = ew_slabs[d]
+            out = jax.device_put(jnp.zeros((n_edges + 1,), jnp.float32),
+                                 ew_in.devices().pop()
+                                 if hasattr(ew_in, "devices")
+                                 else None)
+            for j in owned[d]:
+                row_tiles = _row_tiles(pg, j)
+                if not row_tiles:
+                    continue
+                scored, tiles = [], []
+                for k, s in row_tiles:
+                    tile = pg.tiles[(j, k)][s]
+                    mask = tile.edge_pos >= 0
+                    scored.append(
+                        (ew_in[np.maximum(tile.edge_pos, 0)], mask))
+                    tiles.append((tile, mask))
+                normed = self._edge_softmax_rows(scored)
+                for (tile, mask), out_t in zip(tiles, normed):
+                    idx = np.where(mask, tile.edge_pos, n_edges)
+                    out = out.at[idx.ravel()].set(
+                        jnp.where(mask, out_t, 0.0).ravel())
+                per_dev[d]["shards"] += 1
+            per_dev[d]["tile_ops"] += self.stats.tile_ops - before
+            outs.append(out)
+        return outs
 
     # ------------------------------------------------------------------ #
     def _epilogue(self, tp: TilePlan, meta: dict, tile: jnp.ndarray,
@@ -917,188 +1502,29 @@ class BinaryExecutor:
         return order
 
     # ------------------------------------------------------------------ #
-    def _run_aggregate(self, lp, meta, pg, h_in, edge_vals, inv_deg,
-                       weights, gtiles=None) -> jnp.ndarray:
-        n1, n2, nb = pg.config.n1, pg.config.n2, pg.n_blocks
-        nf = ((max(lp.f_in, 1) + n2 - 1) // n2)
-        op = {AggOp.SUM: "sum", AggOp.MEAN: "mean",
-              AggOp.MAX: "max", AggOp.MIN: "min"}[AggOp(lp.mode)]
-        ewl = meta.get("edge_weight_layer")
-        ew = edge_vals[ewl] if ewl is not None else None
-        out_tiles: Dict[Tuple[int, int], jnp.ndarray] = {}
-        init = (jnp.full((n1, n2), -3.4e38, jnp.float32) if op == "max" else
-                jnp.full((n1, n2), 3.4e38, jnp.float32) if op == "min" else
-                jnp.zeros((n1, n2), jnp.float32))
-        for tp in self._block_order(lp):
-            i, j = tp.out_i, tp.out_j
-            acc = init
-            flag = jnp.zeros((n1,), bool)
-            for ins in tp.compute:           # SPDMM steps, stream order
-                jj, k, ii = ins.args[0], ins.args[1], ins.args[2]
-                s, dyn = ins.args[3] >> 1, ins.args[3] & 1
-                h_tile = jax.lax.dynamic_slice(
-                    h_in, (k * n1, ii * n2), (n1, n2))
-                cols, v, mask, epos = _tile_arrays(pg, gtiles, jj, k, s)
-                if dyn:
-                    v = jnp.where(mask, ew[jnp.maximum(epos, 0)], 0.0)
-                acc, flag = self.ack.spdmm(h_tile, cols, v, mask, acc,
-                                           flag, op)
-                self.stats.tile_ops += 1
-            if op in ("max", "min"):
-                acc = jnp.where(flag[:, None], acc, 0.0)
-            elif op == "mean":
-                scale = jax.lax.dynamic_slice(inv_deg, (j * n1,), (n1,))
-                acc = acc * scale[:, None]
-            acc = self._epilogue(tp, meta, acc, weights,
-                                 i * n2, (i + 1) * n2)
-            out_tiles[(i, j)] = acc
-            if not self.overlap:
-                jax.block_until_ready(acc)
-        return self._assemble(out_tiles, nb, nf)
-
-    # ------------------------------------------------------------------ #
-    def _run_linear(self, lp, meta, pg, h_in, weights):
-        n1, n2, nb = pg.config.n1, pg.config.n2, pg.n_blocks
-        fi_pad = ((max(lp.f_in, 1) + n2 - 1) // n2) * n2
-        fo_pad = ((max(lp.f_out, 1) + n2 - 1) // n2) * n2
-        W = np.zeros((fi_pad, fo_pad), np.float32)
-        W0 = np.asarray(weights[meta["W"]], np.float32)
-        W[: W0.shape[0], : W0.shape[1]] = W0
-        Wj = jnp.asarray(W)
-        b = None
-        if "b" in meta:
-            b0 = np.asarray(weights[meta["b"]], np.float32)
-            b = jnp.asarray(np.pad(b0, (0, fo_pad - b0.shape[0])))
-        out_tiles: Dict[Tuple[int, int], jnp.ndarray] = {}
-        for tp in self._block_order(lp):
-            i, j = tp.out_i, tp.out_j
-            acc = jnp.zeros((n1, n2), jnp.float32)
-            for ins in tp.compute:           # GEMM steps: args=(j, k, i)
-                k = ins.args[1]
-                h_tile = jax.lax.dynamic_slice(
-                    h_in, (j * n1, k * n2), (n1, n2))
-                w_tile = jax.lax.dynamic_slice(
-                    Wj, (k * n2, i * n2), (n2, n2))
-                acc = self.ack.gemm(h_tile, w_tile, acc)
-                self.stats.tile_ops += 1
-            if b is not None:
-                acc = acc + jax.lax.dynamic_slice(b, (i * n2,), (n2,))
-            acc = self._epilogue(tp, meta, acc, weights,
-                                 i * n2, (i + 1) * n2)
-            out_tiles[(i, j)] = acc
-            if not self.overlap:
-                jax.block_until_ready(acc)
-        return self._assemble(out_tiles, nb, fo_pad // n2)
-
-    # ------------------------------------------------------------------ #
-    def _run_vector_inner(self, lp, meta, pg, h_in, weights, gtiles=None):
-        n1, n2 = pg.config.n1, pg.config.n2
-        pair = lp.mode == 1          # CSI mode bit — the binary decides
-        ew = jnp.zeros((pg.n_edges + 1,), jnp.float32)
-        for tp in self._block_order(lp):
-            j, k, s = tp.out_j, tp.tile_k, tp.slice_id
-            cols, _, mask, epos = _tile_arrays(pg, gtiles, j, k, s)
-            acc = jnp.zeros(cols.shape, jnp.float32)
-            for ins in tp.compute:           # SDDMM steps: args=(j,k,i,s)
-                i = ins.args[2]
-                h_dst = jax.lax.dynamic_slice(h_in, (j * n1, i * n2),
-                                              (n1, n2))
-                h_src = jax.lax.dynamic_slice(h_in, (k * n1, i * n2),
-                                              (n1, n2))
-                acc = self.ack.sddmm(h_dst, h_src, cols, mask, acc,
-                                     pair_sum=pair)
-                self.stats.tile_ops += 1
-            acc = self._epilogue(tp, meta, acc, weights, 0, n2)
-            idx = jnp.where(mask, epos, pg.n_edges)
-            ew = ew.at[idx.ravel()].set(acc.ravel())
-            if not self.overlap:
-                jax.block_until_ready(ew)
-        return ew[: pg.n_edges]
-
-    # ------------------------------------------------------------------ #
-    def _run_vadd(self, lp, meta, pg, xa, xb, weights):
-        n1, n2, nb = pg.config.n1, pg.config.n2, pg.n_blocks
-        alpha, beta = meta["alpha"], meta["beta"]
-        fi_pad = max(xa.shape[1], xb.shape[1])
-        nf = fi_pad // n2
-        out_tiles: Dict[Tuple[int, int], jnp.ndarray] = {}
-        for tp in self._block_order(lp):
-            i, j = tp.out_i, tp.out_j
-            ta = jax.lax.dynamic_slice(xa, (j * n1, i * n2), (n1, n2))
-            tc = jax.lax.dynamic_slice(xb, (j * n1, i * n2), (n1, n2))
-            t = self.ack.vadd(ta, tc, alpha, beta)
-            self.stats.tile_ops += 1
-            t = self._epilogue(tp, meta, t, weights, i * n2, (i + 1) * n2)
-            out_tiles[(i, j)] = t
-            if not self.overlap:
-                jax.block_until_ready(t)
-        return self._assemble(out_tiles, nb, nf)
-
-    # ------------------------------------------------------------------ #
-    def _run_vertex_act(self, lp, meta, pg, h_in, weights):
-        n1, n2, nb = pg.config.n1, pg.config.n2, pg.n_blocks
-        fi_pad = ((max(lp.f_in, 1) + n2 - 1) // n2) * n2
-        nf = fi_pad // n2
-        out_tiles: Dict[Tuple[int, int], jnp.ndarray] = {}
-        for tp in self._block_order(lp):
-            i, j = tp.out_i, tp.out_j
-            t = jax.lax.dynamic_slice(h_in, (j * n1, i * n2), (n1, n2))
-            op = tp.compute[0]               # the ACT / AFFINE instr
-            if lp.layer_type == LayerType.BATCHNORM:
-                mu, sig, gam, bet = (
-                    np.asarray(weights[meta[k]], np.float32)
-                    for k in ("mu", "sigma", "gamma", "beta"))
-                eps = float(meta.get("eps", 1e-5))
-                sc = gam / np.sqrt(sig ** 2 + eps)
-                sh = bet - mu * sc
-                sc = np.pad(sc, (0, fi_pad - sc.shape[0]))
-                sh = np.pad(sh, (0, fi_pad - sh.shape[0]))
-                t = self.ack.affine(t, jnp.asarray(sc[i * n2:(i + 1) * n2]),
-                                    jnp.asarray(sh[i * n2:(i + 1) * n2]))
-            else:
-                t = self.ack.act(t, Activation(op.act))
-            self.stats.tile_ops += 1
-            out_tiles[(i, j)] = t
-            if not self.overlap:
-                jax.block_until_ready(t)
-        return self._assemble(out_tiles, nb, nf)
-
-    # ------------------------------------------------------------------ #
     def _run_edge_act(self, lp, pg, ew_in, gtiles=None):
         """Edge activations; EDGE_SOFTMAX uses the two-pass tile scheme
         (max/sum accumulated per destination row across a shard's tiles,
-        the Activation Unit's exp/divide applied per tile)."""
+        the Activation Unit's exp/divide applied per tile) through the
+        shared row math."""
         act = Activation(lp.mode)
         if act != Activation.EDGE_SOFTMAX:
             out = apply_activation(ew_in, act)
             self.stats.tile_ops += len(lp.tiles)
             return out
-        n1 = pg.config.n1
         nb = pg.n_blocks
         ew = jnp.zeros((pg.n_edges + 1,), jnp.float32)
         for j in range(nb):
-            row_tiles = [(k, s) for (jj, k), ts in sorted(pg.tiles.items())
-                         if jj == j for s in range(len(ts))]
+            row_tiles = _row_tiles(pg, j)
             if not row_tiles:
                 continue
-            mx = jnp.full((n1,), -3.4e38, jnp.float32)
+            scored, metas = [], []
             for k, s in row_tiles:
                 _, _, mask, epos = _tile_arrays(pg, gtiles, j, k, s)
-                sc = jnp.where(mask, ew_in[jnp.maximum(epos, 0)], -3.4e38)
-                mx = jnp.maximum(mx, jnp.max(sc, axis=1))
-            mx = jnp.where(mx <= -3.4e38, 0.0, mx)
-            den = jnp.zeros((n1,), jnp.float32)
-            exps = []
-            for k, s in row_tiles:
-                _, _, mask, epos = _tile_arrays(pg, gtiles, j, k, s)
-                e = jnp.where(mask, jnp.exp(ew_in[jnp.maximum(epos, 0)]
-                                            - mx[:, None]), 0.0)
-                den = den + jnp.sum(e, axis=1)
-                exps.append((mask, epos, e))
-                self.stats.tile_ops += 1
-            den = jnp.maximum(den, 1e-12)
-            for mask, epos, e in exps:
-                out_t = e / den[:, None]
+                scored.append((ew_in[jnp.maximum(epos, 0)], mask))
+                metas.append((mask, epos))
+            normed = self._edge_softmax_rows(scored)
+            for (mask, epos), out_t in zip(metas, normed):
                 idx = jnp.where(mask, epos, pg.n_edges)
                 ew = ew.at[idx.ravel()].set(
                     jnp.where(mask, out_t, 0.0).ravel())

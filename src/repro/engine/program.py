@@ -64,14 +64,26 @@ def _layer_manifest(model: ModelIR) -> Dict[str, Dict[str, Any]]:
     return layers
 
 
-def build_manifest(program: Program, graph_name: str = "graph") -> dict:
-    """Everything `engine.run` needs beyond the binary + arrays."""
-    from repro.core.passes.schedule import residency_schedule
+def build_manifest(program: Program, graph_name: str = "graph",
+                   n_devices: Optional[int] = None) -> dict:
+    """Everything `engine.run` needs beyond the binary + arrays.
+
+    ``n_devices`` (set when the program is compiled for a mesh) adds a
+    ``placement`` section: the per-device shard orders and halo sets of
+    the multi-device executor.  Programs compiled without it still run
+    on a mesh — the executor derives the placement from the binary, the
+    same backward-compat path old ``.gagi`` bundles take."""
+    from repro.core.passes.schedule import (placement_schedule,
+                                            residency_schedule)
     m, pg = program.model, program.pgraph
     sinks = [i for i, l in m.layers.items() if not l.child_ids]
     sink = sinks[-1] if sinks else m.topo_order()[-1]
+    residency = residency_schedule(program)
+    placement = (placement_schedule(program, n_devices, residency)
+                 if n_devices is not None else None)
     return {
-        "residency": residency_schedule(program),
+        "residency": residency,
+        **({"placement": placement} if placement is not None else {}),
         "format": MANIFEST_FORMAT,
         "version": MANIFEST_VERSION,
         "model_name": m.name,
@@ -212,13 +224,15 @@ class CompiledProgram:
 def from_program(program: Program, binary: Optional[bytes] = None,
                  t_loc: float = 0.0, cache_key: str = "",
                  graph_name: str = "graph",
-                 source: Optional[Any] = None) -> CompiledProgram:
+                 source: Optional[Any] = None,
+                 n_devices: Optional[int] = None) -> CompiledProgram:
     """Wrap an object-graph :class:`Program` into a CompiledProgram."""
     from repro.core.isa import assemble
     if binary is None:
         binary = assemble(program.all_instrs())
     weights = {k: np.asarray(v) for k, v in program.model.weights.items()}
     return CompiledProgram(
-        binary=binary, manifest=build_manifest(program, graph_name),
+        binary=binary,
+        manifest=build_manifest(program, graph_name, n_devices=n_devices),
         weights=weights, pgraph=program.pgraph, t_loc=t_loc,
         cache_key=cache_key, source=source)

@@ -19,3 +19,20 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh(n_data: int = 1, n_model: int = 1):
     """Small mesh for tests (host devices)."""
     return make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_device_mesh(n_devices=None):
+    """1-D ``dev`` mesh for the placement-scheduled multi-device
+    executor (``Engine.run(..., mesh=...)``): destination shards are
+    LPT-assigned to these devices and halo sub-fibers move over the
+    mesh axis.  ``n_devices=None`` takes every local device; an int
+    takes the first N (``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+    forces virtual host devices for tests/CI)."""
+    import jax
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else int(n_devices)
+    if n < 1 or n > len(devs):
+        raise ValueError(
+            f"make_device_mesh: asked for {n} devices but "
+            f"{len(devs)} are available")
+    return make_mesh((n,), ("dev",), devices=devs[:n])

@@ -68,6 +68,33 @@ def test_run_batch_host_matches_device():
     assert np.array_equal(yd, yh)
 
 
+@pytest.mark.parametrize("name", ["b1", "b6"])
+def test_host_batch_interleaves_lanes_and_amortizes_h2d(name):
+    """Host-path batching: lanes stream TOGETHER, interleaved per staged
+    shard, so each shard's tile working set is shipped once per batch
+    instead of once per lane — strictly less H2D traffic than looping
+    the lanes, with the same bits and one double-buffered window."""
+    g = _g(seed=7)
+    x = jnp.asarray(G.random_features(g, seed=4))
+    lanes = [x, x * 0.5, x * -1.0, x + 2.0]
+    eng = _engine()
+    prog = eng.compile(name, g)
+    h2d_seq = 0
+    shards_seq = 0
+    for xl in lanes:
+        eng.run(prog, xl, residency="host")
+        h2d_seq += eng.exec_stats.h2d_bytes
+        shards_seq += eng.exec_stats.shards_streamed
+    xs = jnp.stack(lanes)
+    yh = np.asarray(eng.run_batch(prog, xs, residency="host"))
+    st = eng.exec_stats
+    assert st.runs == 1                      # one logical batched pass
+    assert st.h2d_bytes < h2d_seq            # tile transfers amortized
+    assert st.shards_streamed == shards_seq // len(lanes)
+    yd = np.asarray(eng.run_batch(prog, xs))
+    assert np.array_equal(yd, yh)
+
+
 def test_compile_residency_default_is_carried_not_cached():
     g = _g(seed=9)
     x = jnp.asarray(G.random_features(g, seed=1))
@@ -213,6 +240,32 @@ def test_budget_gates_batched_device_runs_at_batch_scale():
     eng.resident_budget_bytes = est1 + 1
     with pytest.raises(ResidentBudgetError):     # replay is gated too
         eng.run_batch(prog, xs)
+    eng.resident_budget_bytes = None
+
+
+def test_budget_refusal_reports_peak_budget_and_first_layer():
+    """A device-path refusal must be actionable: the message carries
+    the liveness-aware peak estimate, the budget (both in bytes), the
+    overshoot, and names the FIRST layer step that exceeds it."""
+    g = _g(nv=400, ne=2400, seed=19)
+    x = jnp.asarray(G.random_features(g, seed=5))
+    eng = _engine()
+    prog = eng.compile("b1", g)
+    est = eng._executor.estimate_device_peak_bytes(prog, x.shape[1])
+    budget = est // 2
+    eng.resident_budget_bytes = budget
+    with pytest.raises(ResidentBudgetError) as ei:
+        eng.run(prog, x)
+    msg = str(ei.value)
+    assert str(est) in msg and str(budget) in msg
+    assert str(est - budget) in msg          # the overshoot
+    assert "first exceeded at layer" in msg
+    # the named layer is the first step whose live set busts the budget
+    static, x_bytes, live = eng._executor._live_profile(prog, x.shape[1])
+    first = next(t for t, lv in enumerate(live)
+                 if static + x_bytes + lv > budget)
+    lp = prog.plan().layers[first]
+    assert f"layer {lp.layer_id}" in msg
     eng.resident_budget_bytes = None
 
 

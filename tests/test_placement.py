@@ -1,0 +1,302 @@
+"""Placement-aware multi-device execution (compiler placement schedule +
+mesh executor).
+
+Covers the tentpole acceptance criteria:
+  * the placement schedule (LPT shard -> device assignment, per-device
+    greedy max-overlap shard orders, per-layer halo sets) is structurally
+    sound, deterministic, and round-trips ``.gagi``;
+  * ``derive_placement`` (the backward-compat fallback for bundles
+    written before manifests carried a ``placement`` section) reproduces
+    the compiler-emitted schedule exactly;
+  * the multi-device path (``mesh=`` knob) is BIT-identical to the
+    single-device executor for every benchmark model (b1..b8) on two
+    graphs — the dedicated CI job runs this file under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so the
+    per-device schedules and the halo-exchange collective actually span
+    four devices;
+  * per-device ``ExecStats``: halo bytes, shard counts, load imbalance.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core.ir import LayerType
+from repro.core.passes.partition import PartitionConfig, halo_sets
+from repro.core.passes.schedule import lpt_assign
+from repro.engine import Engine, derive_placement, ensure_placement
+
+GEOM = PartitionConfig(n1=32, n2=8)
+N_DEV = min(4, jax.local_device_count())
+
+
+def _g(nv=160, ne=800, f=12, c=4, seed=0):
+    g = G.random_graph(nv, ne, seed=seed).gcn_normalized()
+    g.feat_dim, g.n_classes = f, c
+    return g
+
+
+def _engine(**kw) -> Engine:
+    return Engine(geometry=GEOM, n_pes=4, **kw)
+
+
+# --------------------------------------------------------------------------- #
+# Placement schedule structure (pure compiler output — no devices needed).
+# --------------------------------------------------------------------------- #
+def test_placement_schedule_structure():
+    g = _g(seed=11)
+    prog = _engine().compile("b6", g, mesh=4)
+    pl = prog.manifest["placement"]
+    nb = prog.pgraph.n_blocks
+    assert pl["n_devices"] == 4
+    assert len(pl["assignment"]) == nb
+    assert all(0 <= d < 4 for d in pl["assignment"])
+    assert len(pl["loads"]) == 4
+    owned = [set() for _ in range(4)]
+    for j, d in enumerate(pl["assignment"]):
+        owned[d].add(j)
+    res = prog.manifest["residency"]
+    plan = prog.plan()
+    types = {lp.layer_id: lp.layer_type for lp in plan.layers}
+    for lid, lpl in pl["layers"].items():
+        sources = res["layers"][lid]["sources"]
+        for d in range(4):
+            order = lpl["order"][str(d)]
+            # each device's order is a permutation of ITS sourced shards
+            assert sorted(order) == sorted(
+                int(j) for j in sources if pl["assignment"][int(j)] == d)
+            halo = set(lpl["halo"][str(d)])
+            # halo is needed-minus-owned: disjoint from owned blocks,
+            # and every halo block is some sourced block of this device
+            assert not (halo & owned[d])
+            need = set()
+            for j in order:
+                need.update(sources[str(j)])
+            assert halo == need - owned[d]
+        # row-local layers (GEMM / vadd / activations) exchange nothing
+        if types[int(lid)] in (LayerType.LINEAR, LayerType.VECTOR_ADD,
+                               LayerType.ACTIVATION, LayerType.BATCHNORM):
+            assert all(not lpl["halo"][str(d)] for d in range(4))
+        # halo_bytes arithmetic: blocks x (n1 * padded f_in * 4)
+        fp = ((max(
+            next(lp.f_in for lp in plan.layers
+                 if lp.layer_id == int(lid)), 1) + GEOM.n2 - 1)
+            // GEOM.n2) * GEOM.n2
+        for d in range(4):
+            assert lpl["halo_bytes"][str(d)] == \
+                len(lpl["halo"][str(d)]) * GEOM.n1 * fp * 4
+    assert pl["halo_bytes_total"] == sum(
+        lpl["halo_bytes"][str(d)]
+        for lpl in pl["layers"].values() for d in range(4))
+
+
+def test_placement_is_deterministic_and_lpt_balanced():
+    g = _g(seed=13)
+    e1, e2 = _engine(), _engine()
+    prog = e1.compile("b1", g, mesh=3)
+    p1 = prog.manifest["placement"]
+    p2 = e2.compile("b1", g, mesh=3).manifest["placement"]
+    assert p1 == p2
+    # Recompute the per-block costs the pass uses (compute-instruction
+    # counts per destination row block) and check the recorded loads
+    # really are that assignment's bin loads, with the classic LPT
+    # balance guarantee: max load <= mean + the largest single item.
+    costs = [0.0] * prog.pgraph.n_blocks
+    for lp in prog.plan().layers:
+        for tp in lp.tiles:
+            if tp.out_j >= 0:
+                costs[tp.out_j] += len(tp.compute)
+    loads = p1["loads"]
+    assert len(loads) == 3 and sum(loads) == sum(costs) > 0
+    for d in range(3):
+        assert loads[d] == sum(c for j, c in enumerate(costs)
+                               if p1["assignment"][j] == d)
+    assert max(loads) <= sum(costs) / 3 + max(costs)
+    # single-device placement owns everything, exchanges nothing
+    p1d = derive_placement(
+        e1.compile("b1", g).plan(),
+        e1.compile("b1", g).manifest["residency"],
+        e1.compile("b1", g).manifest["geometry"], 1)
+    assert p1d["assignment"] == [0] * len(p1d["assignment"])
+    assert p1d["halo_bytes_total"] == 0
+
+
+def test_halo_sets_helper():
+    # two devices, blocks 0,1 -> dev0, block 2 -> dev1; shard 0 reads
+    # {0,2}, shard 2 reads {1,2}
+    halos = halo_sets([0, 0, 1], {"0": [0, 2], "2": [1, 2]}, 2)
+    assert halos == [[2], [1]]
+
+
+def test_lpt_assign_reused_for_placement():
+    # placement uses the same greedy LPT as the PE scheduler: heaviest
+    # shard lands alone when it dominates
+    assignment, loads = lpt_assign([10.0, 1.0, 1.0, 1.0], 2)
+    assert assignment[0] == 0 and set(assignment[1:]) == {1}
+
+
+# --------------------------------------------------------------------------- #
+# Round-trip + derivation fallback.
+# --------------------------------------------------------------------------- #
+def test_gagi_roundtrips_placement(tmp_path):
+    g = _g(seed=17)
+    eng = _engine()
+    prog = eng.compile("b6", g, mesh=4)
+    path = os.path.join(str(tmp_path), "gat_mesh.gagi")
+    prog.save(path)
+    loaded = _engine().load(path)
+    assert loaded.manifest["placement"] == prog.manifest["placement"]
+
+
+def test_pre_placement_bundle_falls_back_to_derivation(tmp_path):
+    """A .gagi written before manifests carried a placement section
+    still runs on a mesh: the executor derives the schedule from the
+    binary — and the derived schedule equals what the compiler emits."""
+    g = _g(seed=19)
+    eng = _engine()
+    prog = eng.compile("b6", g, mesh=4)
+    emitted = prog.manifest["placement"]
+    path = os.path.join(str(tmp_path), "old_mesh.gagi")
+    prog.save(path)
+    loaded = _engine().load(path)
+    loaded.manifest.pop("placement")     # simulate an old bundle
+    derived = ensure_placement(loaded, 4)
+    assert derived == emitted
+    # ensure_placement attaches the derived schedule for future saves
+    assert loaded.manifest["placement"] == emitted
+
+
+def test_compile_without_mesh_emits_no_placement_then_derives():
+    g = _g(seed=23)
+    eng = _engine()
+    prog = eng.compile("b1", g)
+    assert "placement" not in prog.manifest
+    pl = ensure_placement(prog, 2)
+    assert pl["n_devices"] == 2
+    # a cached recompile with the mesh knob reuses/attaches the schedule
+    prog2 = eng.compile("b1", g, mesh=2)
+    assert prog2.manifest["placement"]["n_devices"] == 2
+
+
+# --------------------------------------------------------------------------- #
+# Multi-device execution is bit-identical to the single-device executor.
+# The forced-4-virtual-device CI job runs these with N_DEV == 4; on a
+# single-device host they still exercise the mesh machinery with D=1.
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", ["b1", "b2", "b3", "b4", "b6", "b7"])
+@pytest.mark.parametrize("gseed", [3, 21])
+def test_mesh_is_bit_identical(name, gseed):
+    g = _g(seed=gseed)
+    x = jnp.asarray(G.random_features(g, seed=2))
+    eng = _engine()
+    prog = eng.compile(name, g, mesh=N_DEV)
+    y_dev = np.asarray(eng.run(prog, x))
+    y_mesh = np.asarray(eng.run(prog, x, mesh=N_DEV))
+    assert np.array_equal(y_dev, y_mesh)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["b5", "b8"])
+@pytest.mark.parametrize("gseed", [3, 21])
+def test_mesh_is_bit_identical_deep(name, gseed):
+    """The deep stacks (GIN b5, GraphGym b8) — slow-marked to cap the
+    tier-1 gate; the forced-device CI job runs them unfiltered."""
+    g = _g(seed=gseed)
+    x = jnp.asarray(G.random_features(g, seed=2))
+    eng = _engine()
+    prog = eng.compile(name, g, mesh=N_DEV)
+    y_dev = np.asarray(eng.run(prog, x))
+    y_mesh = np.asarray(eng.run(prog, x, mesh=N_DEV))
+    assert np.array_equal(y_dev, y_mesh)
+
+
+def test_mesh_run_batch_matches_device():
+    g = _g(seed=7)
+    x = jnp.asarray(G.random_features(g, seed=4))
+    xs = jnp.stack([x, x * 0.5, x * -1.0])
+    eng = _engine()
+    prog = eng.compile("b1", g)
+    yd = np.asarray(eng.run_batch(prog, xs))
+    ym = np.asarray(eng.run_batch(prog, xs, mesh=N_DEV))
+    assert np.array_equal(yd, ym)
+    assert eng.exec_stats.runs == 1      # one logical batched pass
+
+
+def test_mesh_derivation_path_is_bit_identical():
+    """Programs compiled WITHOUT the mesh knob (or loaded from old
+    bundles) run on a mesh through the derived placement."""
+    g = _g(seed=29)
+    x = jnp.asarray(G.random_features(g, seed=2))
+    eng = _engine()
+    prog = eng.compile("b3", g)          # no placement section
+    y_dev = np.asarray(eng.run(prog, x))
+    y_mesh = np.asarray(eng.run(prog, x, mesh=N_DEV))
+    assert np.array_equal(y_dev, y_mesh)
+
+
+# --------------------------------------------------------------------------- #
+# Per-device ExecStats.
+# --------------------------------------------------------------------------- #
+def test_mesh_exec_stats_per_device():
+    g = _g(seed=31)
+    x = jnp.asarray(G.random_features(g, seed=2))
+    eng = _engine()
+    prog = eng.compile("b6", g, mesh=N_DEV)
+    dev_ops = None
+    y = eng.run(prog, x)
+    dev_ops = eng.exec_stats.tile_ops
+    eng.run(prog, x, mesh=N_DEV)
+    st = eng.exec_stats
+    assert st.n_devices == N_DEV
+    assert st.per_device is not None and len(st.per_device) == N_DEV
+    # every tile executes on exactly one device
+    assert sum(d["tile_ops"] for d in st.per_device) == dev_ops == \
+        st.tile_ops
+    assert sum(d["blocks"] for d in st.per_device) == prog.pgraph.n_blocks
+    assert st.device_imbalance >= 1.0
+    # GAT aggregates across blocks: with >1 device some sub-fibers must
+    # cross the mesh, and the exchange volume matches the manifest
+    pl = prog.manifest["placement"]
+    assert st.halo_bytes == pl["halo_bytes_total"]
+    if N_DEV > 1:
+        assert st.halo_bytes > 0
+    assert st.peak_device_bytes > 0
+    del y
+
+
+@pytest.mark.skipif(N_DEV < 2, reason="needs >1 device (CI forces 4 "
+                    "with XLA_FLAGS=--xla_force_host_platform_"
+                    "device_count=4)")
+def test_mesh_spreads_work_across_devices():
+    g = _g(seed=37)
+    x = jnp.asarray(G.random_features(g, seed=2))
+    eng = _engine()
+    prog = eng.compile("b1", g, mesh=N_DEV)
+    eng.run(prog, x, mesh=N_DEV)
+    busy = [d for d in eng.exec_stats.per_device if d["tile_ops"] > 0]
+    assert len(busy) == min(N_DEV, prog.pgraph.n_blocks)
+
+
+# --------------------------------------------------------------------------- #
+# Knob validation.
+# --------------------------------------------------------------------------- #
+def test_mesh_rejects_graph_data_and_host_residency():
+    g = _g(seed=41)
+    x = jnp.asarray(G.random_features(g, seed=2))
+    eng = _engine()
+    prog = eng.compile("b1", g)
+    with pytest.raises(ValueError, match="device-resident"):
+        eng.run(prog, x, graph_data={"tiles": {}}, mesh=N_DEV)
+    with pytest.raises(ValueError, match="does not compose"):
+        eng.run(prog, x, residency="host", mesh=N_DEV)
+
+
+def test_make_device_mesh_validates():
+    from repro.launch.mesh import make_device_mesh
+    with pytest.raises(ValueError):
+        make_device_mesh(jax.local_device_count() + 1)
+    m = make_device_mesh()
+    assert m.axis_names == ("dev",)
