@@ -88,6 +88,28 @@ class Graph:
             weight=self.weight[order],
         )
 
+    @property
+    def mutation_token(self) -> int:
+        """Monotone dirty counter for cached views (CSR, signatures).
+
+        The memoized views on this object are keyed by array *identity*,
+        which cannot see in-place content mutation.  Anything that
+        mutates a deployed graph — ``repro.livegraph`` applying a delta,
+        or a caller writing into the arrays directly — must call
+        :meth:`invalidate_views`; cached views compare this token on
+        access and rebuild when it moved.
+        """
+        return self.__dict__.get("_mutation_token", 0)
+
+    def invalidate_views(self) -> int:
+        """Bump :attr:`mutation_token` and drop every memoized view
+        (in-CSR adjacency, edge digest).  Returns the new token."""
+        token = self.mutation_token + 1
+        self.__dict__["_mutation_token"] = token
+        self.__dict__.pop("_in_csr", None)
+        self.__dict__.pop("_edge_digest", None)
+        return token
+
     def in_csr(self):
         """Cached in-adjacency CSR view (``repro.sampling.csr.CSR``).
 
@@ -95,7 +117,10 @@ class Graph:
         to vertex v" lookups on the host; this hook memoizes the one-time
         O(|V| + |E|) CSR build on the graph object (same identity-keyed
         invalidation rule as the engine's signature memo: rebinding the
-        edge arrays invalidates, in-place mutation is unsupported).
+        edge arrays invalidates).  In-place *content* mutation is
+        invisible to identity checks — mutators must call
+        :meth:`invalidate_views` (``repro.livegraph`` does, per delta),
+        and the memo also re-checks :attr:`mutation_token` on access.
         """
         from repro.sampling.csr import in_csr  # lazy: core has no other
         return in_csr(self)                    # dependency on sampling

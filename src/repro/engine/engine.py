@@ -73,31 +73,57 @@ def _resolve_mesh(mesh):
 # --------------------------------------------------------------------------- #
 # Cache-key signatures.
 # --------------------------------------------------------------------------- #
+def _live_version_of(graph):
+    """The :class:`repro.livegraph.GraphVersion` a graph-ish object
+    denotes, or ``None``.  Duck-typed (no livegraph import): a
+    ``LiveGraphServer`` handle carries ``_live_server`` and resolves to
+    its *active* version; a version's materialized graph carries
+    ``_live_version``."""
+    server = getattr(graph, "_live_server", None)
+    if server is not None:
+        return server.active
+    return getattr(graph, "_live_version", None)
+
+
 def graph_signature(g: Graph) -> str:
     """Partition signature of a graph: everything the compiled program
     depends on — topology (Step 3) plus feat_dim/n_classes, which size
     the layers of builder-constructed models.
 
+    Live-versioned graphs (``repro.livegraph``) return their
+    *structural* signature instead: tile-grid geometry + the
+    (j, k, n_slices) tile structure, which is everything the
+    instruction binary depends on.  Content-only deltas keep the
+    signature — and therefore the program-cache key — so a mutated
+    live graph reuses its compiled program with rebound tiles.
+
     The O(|E|) hash over the edge arrays is memoized on the graph object,
     keyed by the array objects themselves (strong references, compared
     with ``is``, so a freed array's id can never be mistaken for a new
-    one).  Deployed graphs are treated as immutable: rebinding arrays
-    (what ``dataclasses.replace`` and every Graph method do) invalidates
-    the memo; mutating array *contents* in place is not supported.
+    one) plus the graph's ``mutation_token`` dirty counter.  Deployed
+    graphs are treated as immutable: rebinding arrays (what
+    ``dataclasses.replace`` and every Graph method do) invalidates the
+    memo; mutating array *contents* in place requires a
+    ``Graph.invalidate_views()`` call (which bumps the token).
     Repeated ``submit`` calls on the same deployed graph cost O(1); the
     cheap scalars are folded in fresh every call.
     """
+    lv = _live_version_of(g)
+    if lv is not None:
+        return lv.structural_signature
+    token = getattr(g, "mutation_token", 0)
     cached = g.__dict__.get("_edge_digest")
     if (cached is None or cached[0] is not g.src
-            or cached[1] is not g.dst or cached[2] is not g.weight):
+            or cached[1] is not g.dst or cached[2] is not g.weight
+            or cached[3] != token):
         h = hashlib.sha1()
         h.update(np.ascontiguousarray(g.src).tobytes())
         h.update(np.ascontiguousarray(g.dst).tobytes())
         h.update(np.ascontiguousarray(g.weight).tobytes())
-        cached = (g.src, g.dst, g.weight, h.hexdigest())
+        cached = (g.src, g.dst, g.weight, token, h.hexdigest())
         g.__dict__["_edge_digest"] = cached
     scalars = f"{g.n_vertices}:{g.n_edges}:{g.feat_dim}:{g.n_classes}"
-    return hashlib.sha1(f"{scalars}|{cached[3]}".encode()).hexdigest()
+    return hashlib.sha1(f"{scalars}|{cached[4]}".encode()).hexdigest()
 
 
 def _weight_digest(model: ModelIR) -> str:
@@ -303,11 +329,20 @@ class Engine:
         devices — in the program manifest, so it round-trips ``.gagi``.
         Programs compiled without it still run on a mesh: the executor
         derives an identical schedule from the binary.
+
+        Live-versioned graphs (a ``repro.livegraph`` handle or a
+        version's materialized graph): the cache key is the version's
+        *structural* signature, so a content-only delta hits the cache;
+        the returned program is then *rebound* to the version's patched
+        tiles (``GraphVersion.bind``) — fresh tiles, zero recompiles.
         """
         if residency not in (None, "device", "host"):
             raise ValueError(f"residency must be 'device' or 'host', "
                              f"got {residency!r}")
         n_devices = _mesh_count(mesh)
+        lv = _live_version_of(graph)
+        if lv is not None:
+            graph = lv.as_graph()
         key = _key or self.cache_key(model, graph, seed=seed,
                                      order_opt=order_opt, fusion=fusion)
         if use_cache:
@@ -315,6 +350,8 @@ class Engine:
             if cached is not None:
                 if n_devices is not None:
                     ensure_placement(cached, n_devices)
+                if lv is not None:
+                    cached = lv.bind(cached)
                 if residency is not None:
                     return dataclasses.replace(
                         cached, default_residency=residency)
@@ -341,12 +378,17 @@ class Engine:
             # device-resident unless a caller asks otherwise.
             self.cache.put(key, dataclasses.replace(
                 prog, source=None, default_residency=None))
+        if lv is not None:
+            # Rebind to the version's tile store (labels the manifest
+            # with version + tile stats); keep this caller's reports.
+            prog = dataclasses.replace(lv.bind(prog), source=prog.source,
+                                       default_residency=residency)
         return prog
 
     def run(self, prog: CompiledProgram, x,
             weights: Optional[Dict[str, np.ndarray]] = None,
             graph_data: Optional[dict] = None,
-            residency: Optional[str] = None, mesh=None):
+            residency: Optional[str] = None, mesh=None, graph=None):
         """Execute a compiled program by decoding its ISA binary.
 
         ``residency="host"`` streams the partition-centric out-of-core
@@ -356,17 +398,31 @@ class Engine:
         placement-scheduled multi-device path: each device executes its
         assigned destination shards under ``shard_map``, exchanging halo
         sub-fibers with collectives.  Results are bit-identical across
-        all three; ``None`` uses the program's compile-time default."""
+        all three; ``None`` uses the program's compile-time default.
+
+        ``graph`` (a live-versioned graph or ``repro.livegraph``
+        handle) rebinds the program to that version's patched tiles
+        before executing — every residency stages the patched tiles
+        transparently, since staging reads ``prog.pgraph``."""
+        prog = self._rebind_live(prog, graph)
         residency = residency or prog.default_residency or "device"
         mesh = _resolve_mesh(mesh)
         return self._executor.run(prog, x, weights=weights,
                                   graph_data=graph_data,
                                   residency=residency, mesh=mesh)
 
+    @staticmethod
+    def _rebind_live(prog: CompiledProgram, graph) -> CompiledProgram:
+        if graph is None:
+            return prog
+        lv = _live_version_of(graph)
+        return lv.bind(prog) if lv is not None else prog
+
     def run_batch(self, prog: CompiledProgram, xs,
                   weights: Optional[Dict[str, np.ndarray]] = None,
                   graph_data: Optional[dict] = None,
-                  residency: Optional[str] = None, mesh=None):
+                  residency: Optional[str] = None, mesh=None,
+                  graph=None):
         """One binary pass for stacked ``[N, V, F]`` features -> [N, V, C].
         ``graph_data`` (stacked, leading batch axis) lets each lane carry
         its own topology over the same compiled program.  ``residency``
@@ -376,7 +432,9 @@ class Engine:
         batch).  ``mesh`` as in :meth:`run`: lanes run as sequential
         eager multi-device passes (tile kernels are cached, but there
         is no whole-pass executable to replay — device-resident
-        batching is the throughput path)."""
+        batching is the throughput path).  ``graph`` rebinds to a live
+        version's tiles, as in :meth:`run`."""
+        prog = self._rebind_live(prog, graph)
         residency = residency or prog.default_residency or "device"
         mesh = _resolve_mesh(mesh)
         return self._executor.run_batch(prog, xs, weights=weights,
@@ -400,26 +458,50 @@ class Engine:
         return prog
 
     # ------------------------------------------------------------------ #
-    def submit(self, req: InferenceRequest) -> InferenceResponse:
-        """Serve one request: cached compile -> binary-driven execution."""
-        key = self.cache_key(req.model, req.graph, seed=req.seed)
-        hit = key in self.cache
-        prog = self.compile(req.model, req.graph, seed=req.seed, _key=key)
-        t0 = time.perf_counter()
-        y = self.run(prog, req.features, graph_data=req.graph_data)
-        jax.block_until_ready(y)
-        t_loh = time.perf_counter() - t0
-        t_loc = 0.0 if hit else prog.t_loc
+    @staticmethod
+    def _admit_live(req: InferenceRequest):
+        """Resolve a live-graph handle at admission: pin the active
+        version (inflight refcount) and swap the request's graph for
+        that version's materialized snapshot.  Returns ``(req, pin)``;
+        callers release the pin when the request completes."""
+        server = getattr(req.graph, "_live_server", None)
+        if server is None:
+            return req, None
+        version = server.admit()
+        return (dataclasses.replace(req, graph=version.as_graph()),
+                (server, version.vid))
 
-        self.stats.requests += 1
-        self.stats.cache_hits += int(hit)
-        self.stats.cache_misses += int(not hit)
-        self.stats.total_t_loh += t_loh
-        rid = req.request_id or f"req{self.stats.requests - 1}"
-        return InferenceResponse(
-            request_id=rid, output=y, t_loc=t_loc, t_loh=t_loh,
-            cache_hit=hit, cache_key=key, model_name=prog.model_name,
-            graph_name=req.graph.name)
+    def submit(self, req: InferenceRequest) -> InferenceResponse:
+        """Serve one request: cached compile -> binary-driven execution.
+
+        ``req.graph`` may be a ``repro.livegraph.LiveGraphServer``
+        handle: the request is then pinned to the version active at
+        admission and served on exactly that version's tiles, whatever
+        cutovers happen meanwhile."""
+        req, pin = self._admit_live(req)
+        try:
+            key = self.cache_key(req.model, req.graph, seed=req.seed)
+            hit = key in self.cache
+            prog = self.compile(req.model, req.graph, seed=req.seed,
+                                _key=key)
+            t0 = time.perf_counter()
+            y = self.run(prog, req.features, graph_data=req.graph_data)
+            jax.block_until_ready(y)
+            t_loh = time.perf_counter() - t0
+            t_loc = 0.0 if hit else prog.t_loc
+
+            self.stats.requests += 1
+            self.stats.cache_hits += int(hit)
+            self.stats.cache_misses += int(not hit)
+            self.stats.total_t_loh += t_loh
+            rid = req.request_id or f"req{self.stats.requests - 1}"
+            return InferenceResponse(
+                request_id=rid, output=y, t_loc=t_loc, t_loh=t_loh,
+                cache_hit=hit, cache_key=key, model_name=prog.model_name,
+                graph_name=req.graph.name)
+        finally:
+            if pin is not None:
+                pin[0].release(pin[1])
 
     def submit_batch(self, reqs: Sequence[InferenceRequest]
                      ) -> List[InferenceResponse]:
@@ -438,6 +520,17 @@ class Engine:
         """
         if not reqs:
             return []
+        admitted = [self._admit_live(r) for r in reqs]
+        reqs = [r for r, _ in admitted]
+        pins = [p for _, p in admitted if p is not None]
+        try:
+            return self._submit_batch_resolved(reqs)
+        finally:
+            for server, vid in pins:
+                server.release(vid)
+
+    def _submit_batch_resolved(self, reqs: Sequence[InferenceRequest]
+                               ) -> List[InferenceResponse]:
         key = self.cache_key(reqs[0].model, reqs[0].graph,
                              seed=reqs[0].seed)
         for r in reqs[1:]:
@@ -447,6 +540,17 @@ class Engine:
                     f"submit_batch requires one cache key per batch: "
                     f"request {r.request_id!r} has key {k[:12]}… but the "
                     f"batch was opened with {key[:12]}…")
+        # Live versions share the structural cache key by design, but a
+        # batch is ONE binary pass over ONE tile set: mixing versions
+        # would silently serve some requests the wrong graph.
+        lv = _live_version_of(reqs[0].graph)
+        for r in reqs[1:]:
+            if _live_version_of(r.graph) is not lv:
+                raise ValueError(
+                    "submit_batch cannot mix graph versions in one "
+                    "batch: all requests must be admitted against the "
+                    "same live version (the runtime batches per "
+                    "version for exactly this reason)")
         with_gd = sum(r.graph_data is not None for r in reqs)
         if 0 < with_gd < len(reqs):
             raise ValueError(
@@ -461,6 +565,8 @@ class Engine:
             # attach to the instance repeat batches will see.  (On a
             # hit, compile() already returned that instance.)
             prog = self.cache.get(key) or prog
+            if lv is not None:
+                prog = lv.bind(prog)
         xs = stack_features([r.features for r in reqs])
         # Bucket the batch axis to the next power of two (zero-filled
         # lanes, outputs sliced off): deadline flushes produce ragged

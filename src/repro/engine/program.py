@@ -72,9 +72,15 @@ def build_manifest(program: Program, graph_name: str = "graph",
     ``placement`` section: the per-device shard orders and halo sets of
     the multi-device executor.  Programs compiled without it still run
     on a mesh — the executor derives the placement from the binary, the
-    same backward-compat path old ``.gagi`` bundles take."""
+    same backward-compat path old ``.gagi`` bundles take.
+
+    ``tile_stats`` records per-tile nnz/density from the ELL metadata —
+    refreshed whenever ``repro.livegraph`` rebinds a program to patched
+    tiles, and the observability a Dynasparse-style bind-time kernel
+    remapper would key on (see ROADMAP)."""
     from repro.core.passes.schedule import (placement_schedule,
                                             residency_schedule)
+    from repro.livegraph.tiles import tile_density_stats
     m, pg = program.model, program.pgraph
     sinks = [i for i, l in m.layers.items() if not l.child_ids]
     sink = sinks[-1] if sinks else m.topo_order()[-1]
@@ -99,6 +105,7 @@ def build_manifest(program: Program, graph_name: str = "graph",
         },
         "sink": int(sink),
         "sink_f_out": int(m.layers[sink].f_out),
+        "tile_stats": tile_density_stats(pg),
         "layers": _layer_manifest(m),
     }
 

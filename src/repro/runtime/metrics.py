@@ -82,6 +82,13 @@ class Metrics:
         self._depth_obs = 0
         self._served = 0
         self._serve_wall = 0.0
+        # Live-graph (repro.livegraph) observability: which graph
+        # version is active, how often it changed, and how much traffic
+        # each version served — version skew made visible.
+        self.active_graph_version: Optional[int] = None
+        self.cutovers = 0
+        self.versions_reclaimed = 0
+        self._version_requests: Dict[int, int] = {}
 
     # ------------------------------------------------------------------ #
     def _series(self, key: str) -> _Series:
@@ -115,6 +122,26 @@ class Metrics:
         self._serve_wall += wall_s
 
     # ------------------------------------------------------------------ #
+    # Live-graph versioning (called by repro.livegraph.LiveGraphServer
+    # and the serving loop's admission/release path).
+    # ------------------------------------------------------------------ #
+    def set_active_version(self, vid: int) -> None:
+        self.active_graph_version = vid
+
+    def record_cutover(self, from_vid: int, to_vid: int) -> None:
+        """One zero-downtime version swap completed."""
+        self.cutovers += 1
+        self.active_graph_version = to_vid
+
+    def record_version_request(self, vid: int) -> None:
+        """One request served on graph version ``vid``."""
+        self._version_requests[vid] = \
+            self._version_requests.get(vid, 0) + 1
+
+    def record_version_reclaimed(self, vid: int) -> None:
+        self.versions_reclaimed += 1
+
+    # ------------------------------------------------------------------ #
     @property
     def throughput_rps(self) -> float:
         return self._served / self._serve_wall if self._serve_wall else 0.0
@@ -135,4 +162,17 @@ class Metrics:
             s = series.snapshot(max_batch)
             s["name"] = self._key_names.get(key, key[:12])
             per_key[key] = s
-        return {"global": g, "per_key": per_key}
+        out = {"global": g, "per_key": per_key}
+        if (self.active_graph_version is not None or self.cutovers
+                or self._version_requests):
+            # Only present when live graphs are in play: snapshots of
+            # static-graph deployments are unchanged.
+            out["livegraph"] = {
+                "active_version": self.active_graph_version,
+                "cutovers": self.cutovers,
+                "versions_reclaimed": self.versions_reclaimed,
+                "requests_per_version": {
+                    f"v{k}": v for k, v in
+                    sorted(self._version_requests.items())},
+            }
+        return out

@@ -65,9 +65,25 @@ class OverlayPool:
         return list(self._load)
 
     def cache_key(self, req: InferenceRequest) -> str:
-        """Pool-wide cache key (identical on every overlay)."""
-        return self.engines[0].cache_key(req.model, req.graph,
-                                         seed=req.seed)
+        """Pool-wide batching/routing key (identical on every overlay).
+
+        Live-versioned graphs (``repro.livegraph``) get a ``@v<N>``
+        suffix: versions deliberately SHARE the engine's structural
+        cache key (that is the no-recompile guarantee), but a batch is
+        one binary pass over one tile set, so the batcher must never
+        coalesce requests admitted against different versions.
+        :func:`engine_key` strips the suffix wherever the program cache
+        is consulted, so affinity still routes every version of a graph
+        to the overlay that compiled it."""
+        key = self.engines[0].cache_key(req.model, req.graph,
+                                        seed=req.seed)
+        lv = getattr(req.graph, "_live_version", None)
+        return key if lv is None else f"{key}@v{lv.vid}"
+
+    @staticmethod
+    def engine_key(key: str) -> str:
+        """Batch key -> program-cache key (drop the live-version tag)."""
+        return key.split("@v", 1)[0]
 
     def overlay_for(self, key: str) -> Optional[int]:
         """Which overlay already holds this key's compiled program?
@@ -76,10 +92,11 @@ class OverlayPool:
         out-of-band and keys re-compiled after eviction), then the
         sticky affinity map (keeps a key's home overlay even while its
         program is momentarily evicted, preserving kernel locality)."""
+        ekey = self.engine_key(key)
         for i, e in enumerate(self.engines):
-            if key in e.cache:
+            if ekey in e.cache:
                 return i
-        return self._affinity.get(key)
+        return self._affinity.get(key, self._affinity.get(ekey))
 
     def place(self, batches: Sequence[Batch]) -> List[int]:
         """Assign each batch to an overlay; deterministic.
@@ -95,6 +112,7 @@ class OverlayPool:
             if home is not None:
                 idxs[i] = home
                 self._affinity[b.key] = home
+                self._affinity[self.engine_key(b.key)] = home
                 self._load[home] += b.cost
             else:
                 new.append(i)
@@ -105,6 +123,7 @@ class OverlayPool:
             for i, home in zip(new, assignment):
                 idxs[i] = home
                 self._affinity[batches[i].key] = home
+                self._affinity[self.engine_key(batches[i].key)] = home
         return [int(i) for i in idxs]  # every slot is assigned above
 
     def route(self, key: str, cost: float = 1.0) -> int:

@@ -25,6 +25,7 @@ returns responses in admission order.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
@@ -64,6 +65,7 @@ class ServeLoop:
         self._seq = 0
         self._admitted_at: Dict[int, float] = {}
         self._results: Dict[int, InferenceResponse] = {}
+        self._pins: Dict[int, tuple] = {}    # idx -> (live server, vid)
         self._lock = threading.Lock()
         self._futures: List[Future] = []
         # One single-thread worker per overlay: an overlay's batches run
@@ -84,20 +86,44 @@ class ServeLoop:
     def submit(self, req: InferenceRequest) -> None:
         """Admit one request (raises :class:`QueueFullError` when the
         queue is at capacity), then dispatch any size- or deadline-due
-        batches."""
+        batches.
+
+        Live-graph requests (``req.graph`` is a
+        ``repro.livegraph.LiveGraphServer`` handle) are resolved HERE,
+        at admission: the request pins the version active right now and
+        is served on exactly that version's tiles, however many
+        cutovers happen before it executes.  The batch key carries the
+        version (``OverlayPool.cache_key``), so one batch never mixes
+        versions; the pin is released when the response is recorded,
+        which is what lets a drained retired version be reclaimed."""
         if self.batcher.depth >= self.max_queue:
             self.metrics.record_rejection()
             raise QueueFullError(
                 f"serving queue at capacity ({self.max_queue}); "
                 f"drain or retry later")
+        req, pin = self._resolve_live(req)
         now = self.clock()
         idx = self._seq
         self._seq += 1
         self._admitted_at[idx] = now
+        if pin is not None:
+            with self._lock:
+                self._pins[idx] = pin
         full = self.batcher.add(self.pool.cache_key(req), req, idx, now)
         self.metrics.record_queue_depth(self.batcher.depth)
         due = ([full] if full is not None else []) + self.batcher.due(now)
         self._dispatch(due)
+
+    @staticmethod
+    def _resolve_live(req: InferenceRequest):
+        """Swap a live-graph handle for the active version's snapshot,
+        pinning the version (see :meth:`submit`)."""
+        server = getattr(req.graph, "_live_server", None)
+        if server is None:
+            return req, None
+        version = server.admit()
+        return (dataclasses.replace(req, graph=version.as_graph()),
+                (server, version.vid))
 
     def poll(self) -> None:
         """Flush deadline-due batches (call from an idle loop)."""
@@ -131,12 +157,20 @@ class ServeLoop:
         # batches in this overlay's FIFO — the full experienced latency.
         started = self.clock()
         resps = self.pool.execute_on(overlay, batch)
+        released = []
         with self._lock:
             for idx, r in zip(batch.indices, resps):
                 # experienced latency = queue wait + compile + execute
                 wait = started - self._admitted_at.pop(idx)
                 self.metrics.record_response(r, wait + r.t_loc + r.t_loh)
                 self._results[idx] = r
+                pin = self._pins.pop(idx, None)
+                if pin is not None:
+                    released.append(pin)
+        # Release version pins outside the loop lock (reclamation takes
+        # the live server's own lock; served requests count per version).
+        for server, vid in released:
+            server.release(vid)
 
     # ------------------------------------------------------------------ #
     def drain(self) -> List[InferenceResponse]:

@@ -10,7 +10,12 @@ The O(|V| + |E|) build is memoized on the graph object via
 ``Graph.in_csr()`` (the hook in ``core/graph.py``), with the same
 identity-keyed invalidation rule as the engine's signature memo:
 rebinding the edge arrays (what every ``Graph`` method does) invalidates
-the cache; mutating array contents in place is unsupported.
+the cache.  In-place content mutation is invisible to identity checks,
+so the memo additionally records ``Graph.mutation_token`` — a dirty
+counter bumped by ``Graph.invalidate_views()`` (which ``repro.livegraph``
+calls per applied delta) — and rebuilds when the token moved.  A mutated
+graph can therefore never silently serve stale adjacency, provided the
+mutator invalidates.
 """
 from __future__ import annotations
 
@@ -67,10 +72,17 @@ def build_csr(g: Graph) -> CSR:
 
 
 def in_csr(g: Graph) -> CSR:
-    """Memoized :func:`build_csr`; backs ``Graph.in_csr()``."""
+    """Memoized :func:`build_csr`; backs ``Graph.in_csr()``.
+
+    Invalidation is two-tier: array identity (rebinding arrays, what
+    every ``Graph`` method does) AND the graph's ``mutation_token``
+    dirty counter (bumped by ``Graph.invalidate_views()`` whenever
+    contents are mutated in place — e.g. per applied ``livegraph``
+    delta)."""
+    token = g.mutation_token
     cached = g.__dict__.get("_in_csr")
     if (cached is None or cached[0] is not g.src or cached[1] is not g.dst
-            or cached[2] is not g.weight):
-        cached = (g.src, g.dst, g.weight, build_csr(g))
+            or cached[2] is not g.weight or cached[3] != token):
+        cached = (g.src, g.dst, g.weight, token, build_csr(g))
         g.__dict__["_in_csr"] = cached
-    return cached[3]
+    return cached[4]

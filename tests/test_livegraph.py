@@ -1,0 +1,475 @@
+"""repro.livegraph: incremental mutation + versioned zero-downtime serving.
+
+Covers the subsystem's acceptance criteria:
+  * K random deltas applied incrementally produce tiles, signatures and
+    — through b1 (GCN) / b3 (SAGE) / b6 (GAT) — *outputs* bit-identical
+    to cold-compiling the mutated graph, on the device-resident,
+    ``residency="host"``, and graph-as-data executor paths;
+  * content-only deltas keep the program-cache key (zero recompiles,
+    asserted via engine stats) while structural changes miss;
+  * only touched tiles are rebuilt (retention asserted by object
+    identity across versions);
+  * cutover under load drops and misroutes nothing: every request is
+    served on the version that was active at its admission, and
+    drained retired versions are reclaimed;
+  * the stale-CSR hazard is closed (mutation token) and the manifest
+    carries per-tile nnz/density stats.
+"""
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core.passes.partition import PartitionConfig, partition_graph
+from repro.engine import Engine, InferenceRequest, graph_signature
+from repro.livegraph import (GraphDelta, GraphVersionStore,
+                             LiveGraphServer, as_graph_data)
+from repro.runtime import OverlayPool, ServeLoop
+
+GEOM = PartitionConfig(n1=32, n2=8)
+
+
+def _g(nv=90, ne=400, f=12, c=4, seed=0):
+    g = G.random_graph(nv, ne, seed=seed, dedupe=True).gcn_normalized()
+    g.feat_dim, g.n_classes = f, c
+    return g
+
+
+def _engine(**kw) -> Engine:
+    return Engine(geometry=GEOM, n_pes=4, **kw)
+
+
+def _random_delta(g, rng, n_add=6, n_rm=2, weights=True):
+    d = GraphDelta(g.n_vertices, feat_dim=g.feat_dim)
+    for _ in range(n_add):
+        u, v = map(int, rng.integers(0, g.n_vertices, 2))
+        d.add_edge(u, v, float(rng.uniform(0.1, 1.0)) if weights else 1.0)
+    for _ in range(n_rm):
+        i = int(rng.integers(0, g.n_edges))
+        d.remove_edge(int(g.src[i]), int(g.dst[i]))
+    return d
+
+
+# --------------------------------------------------------------------------- #
+# GraphDelta: validation + coalescing semantics.
+# --------------------------------------------------------------------------- #
+def test_delta_validates_endpoints_and_weights():
+    d = GraphDelta(10)
+    with pytest.raises(IndexError):
+        d.add_edge(10, 0)
+    with pytest.raises(IndexError):
+        d.remove_edge(0, -1)
+    with pytest.raises(ValueError):
+        d.add_edge(0, 1, float("nan"))
+    v = d.add_vertex()
+    assert v == 10
+    d.add_edge(v, 3)            # edges may reference new vertices
+    with pytest.raises(IndexError):
+        d.add_edge(11, 3)
+
+
+def test_delta_coalesce_remove_cancels_add():
+    d = GraphDelta(10)
+    d.add_edge(1, 2, 0.5)
+    d.remove_edge(1, 2)         # kills the add, not a base edge
+    cd = d.coalesce()
+    assert cd.n_adds == 0
+    assert cd.removed_pairs == [(1, 2)]
+    assert cd.must_exist[(1, 2)] is False
+    # remove-then-add re-creates the edge
+    d2 = GraphDelta(10)
+    d2.remove_edge(3, 4)
+    d2.add_edge(3, 4, 2.0)
+    cd2 = d2.coalesce()
+    assert cd2.n_adds == 1 and cd2.must_exist[(3, 4)] is True
+    # double-remove of a base pair with no re-add in between is an error
+    d3 = GraphDelta(10)
+    d3.remove_edge(3, 4)
+    d3.remove_edge(3, 4)
+    with pytest.raises(KeyError):
+        d3.coalesce()
+
+
+def test_delta_apply_to_missing_edge_raises():
+    g = _g()
+    absent = (0, 1)
+    key = g.src.astype(np.int64) * g.n_vertices + g.dst
+    while absent[0] * g.n_vertices + absent[1] in key:
+        absent = (absent[0], absent[1] + 1)
+    d = GraphDelta(g.n_vertices).remove_edge(*absent)
+    with pytest.raises(KeyError):
+        d.apply_to(g)
+    store = GraphVersionStore(_g(), geometry=GEOM)
+    with pytest.raises(KeyError):
+        store.apply(d)
+    assert len(store) == 1                    # failed delta left no version
+
+
+def test_delta_apply_to_canonical_order():
+    """Survivors keep their positions; adds append in arrival order."""
+    g = _g()
+    d = GraphDelta(g.n_vertices)
+    d.add_edge(5, 6, 0.25)
+    d.add_edge(1, 1, 0.75)
+    i = 17
+    d.remove_edge(int(g.src[i]), int(g.dst[i]))
+    out = d.apply_to(g)
+    key = g.src.astype(np.int64) * g.n_vertices + g.dst
+    dead = int(g.src[i]) * g.n_vertices + int(g.dst[i])
+    keep = key != dead
+    assert np.array_equal(out.src[:-2], g.src[keep])
+    assert np.array_equal(out.dst[:-2], g.dst[keep])
+    assert (int(out.src[-2]), int(out.dst[-2])) == (5, 6)
+    assert (int(out.src[-1]), int(out.dst[-1])) == (1, 1)
+
+
+# --------------------------------------------------------------------------- #
+# Incremental tile patching == cold partitioning; COW retention.
+# --------------------------------------------------------------------------- #
+def test_incremental_tiles_match_cold_partition():
+    rng = np.random.default_rng(11)
+    g_ref = _g(seed=4)
+    store = GraphVersionStore(g_ref, geometry=GEOM)
+    prev = store.head
+    for k in range(6):
+        d = _random_delta(g_ref, rng)
+        g_ref = d.apply_to(g_ref)
+        v = store.apply(d)
+        pg_live, pg_cold = v.pgraph, partition_graph(g_ref, GEOM)
+        assert set(pg_live.tiles) == set(pg_cold.tiles)
+        for jk in pg_cold.tiles:
+            live, cold = pg_live.tiles[jk], pg_cold.tiles[jk]
+            assert len(live) == len(cold)
+            for a, b in zip(live, cold):
+                assert np.array_equal(a.cols, b.cols), jk
+                assert np.array_equal(a.vals, b.vals), jk
+                # epos VALUES differ (stable ids vs COO positions); the
+                # occupancy pattern and nnz must agree exactly.
+                assert np.array_equal(a.edge_pos >= 0,
+                                      b.edge_pos >= 0), jk
+                assert a.nnz == b.nnz
+        assert np.array_equal(pg_live.inv_in_degree,
+                              pg_cold.inv_in_degree)
+        # stable edge ids: unique, in range, pad slot never collides
+        eids = np.concatenate([t.edge_pos[t.edge_pos >= 0]
+                               for ts in pg_live.tiles.values()
+                               for t in ts])
+        assert eids.shape[0] == np.unique(eids).shape[0]
+        assert eids.max() < pg_live.n_edges
+        # COW: untouched tiles are THE SAME objects as the parent's
+        touched = {tuple(map(int, s.split(":")))
+                   for s in v.stats.patched}
+        shared = [jk for jk in pg_live.tiles if jk not in touched]
+        assert shared, "delta touched every tile — shrink it"
+        for jk in shared:
+            assert v.store.tiles[jk] is prev.store.tiles[jk]
+            assert v.store.hashes[jk] == prev.store.hashes[jk]
+        assert v.stats.tiles_retained == len(shared)
+        # canonical COO materialization matches the reference chain
+        vg = v.as_graph()
+        assert np.array_equal(vg.src, g_ref.src)
+        assert np.array_equal(vg.dst, g_ref.dst)
+        assert np.array_equal(vg.weight, g_ref.weight)
+        prev = v
+
+
+def test_eid_reuse_bounds_capacity_under_churn():
+    """Removed edge ids are reallocated smallest-first: add/remove churn
+    does not grow the executor's edge-valued buffers."""
+    g = _g()
+    store = GraphVersionStore(g, geometry=GEOM)
+    for r in range(4):
+        d = GraphDelta(store.head.n_vertices)
+        i = 3 * r
+        d.remove_edge(int(g.src[i]), int(g.dst[i]))
+        d.add_edge(int(g.src[i]), int(g.dst[i]),
+                   float(g.weight[i]))     # put it right back
+        g = d.apply_to(g)
+        store.apply(d)
+    assert store.head.store.eid_capacity == store.head.store.live_edges
+
+
+# --------------------------------------------------------------------------- #
+# Signatures: content deltas hit the program cache, structure misses.
+# --------------------------------------------------------------------------- #
+def test_content_delta_keeps_cache_key_structural_delta_misses():
+    g = _g(seed=7)
+    store = GraphVersionStore(g, geometry=GEOM)
+    v0 = store.head
+    sig0, con0 = v0.structural_signature, v0.content_signature
+
+    # weight-only change: same tiles, new content
+    i = 9
+    d = GraphDelta(g.n_vertices)
+    d.remove_edge(int(g.src[i]), int(g.dst[i]))
+    d.add_edge(int(g.src[i]), int(g.dst[i]), 123.0)
+    v1 = store.apply(d)
+    assert v1.structural_signature == sig0
+    assert v1.content_signature != con0
+    assert graph_signature(v1.as_graph()) == \
+        graph_signature(v0.as_graph())
+    assert not v1.stats.structural_change
+
+    # emptying out a whole (j, k) tile drops it from the grid: a
+    # structural change — the instruction binary enumerates tiles
+    jk, te = min(v1.store.edges.items(), key=lambda kv: kv[1].n)
+    d2 = GraphDelta(v1.n_vertices)
+    for u, w_ in zip(te.src.tolist(), te.dst.tolist()):
+        d2.remove_edge(u, w_)
+    v2 = store.apply(d2)
+    assert jk not in v2.store.tiles
+    assert v2.stats.tiles_dropped == 1
+    assert v2.stats.structural_change
+    assert v2.structural_signature != sig0
+    assert graph_signature(v2.as_graph()) != \
+        graph_signature(v1.as_graph())
+
+
+# --------------------------------------------------------------------------- #
+# Equivalence suite: K deltas incrementally == cold compile, bit for
+# bit, on every executor path.
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", ["b1", "b3", "b6"])
+def test_incremental_serving_bit_identical_to_cold(name):
+    rng = np.random.default_rng(23)
+    g_ref = _g(seed=1)
+    store = GraphVersionStore(g_ref, geometry=GEOM)
+    live = LiveGraphServer(store)
+    eng = _engine()
+    x0 = np.asarray(G.random_features(g_ref, seed=2))
+    # warm version 0 (the one compile this engine should ever do)
+    eng.submit(InferenceRequest(name, live, x0))
+    for k in range(3):
+        d = _random_delta(g_ref, rng, n_add=5, n_rm=1)
+        if k == 1:
+            nv = d.add_vertex(np.zeros(g_ref.feat_dim, np.float32))
+            d.add_edge(nv, int(rng.integers(0, g_ref.n_vertices)), 0.4)
+        g_ref = d.apply_to(g_ref)
+        live.apply(d)
+    x = np.zeros((g_ref.n_vertices, g_ref.feat_dim), np.float32)
+    x[:x0.shape[0]] = x0
+
+    cold = _engine()
+    p_cold = cold.compile(name, g_ref)
+    y_cold = cold.run(p_cold, x)
+
+    resp = eng.submit(InferenceRequest(name, live, x))
+    assert resp.cache_hit and eng.stats.compiles == 1, \
+        "content-only deltas must reuse the compiled program"
+    assert np.array_equal(np.asarray(resp.output), np.asarray(y_cold))
+
+    prog = eng.compile(name, live)
+    y_host = eng.run(prog, x, residency="host")
+    assert np.array_equal(np.asarray(y_host), np.asarray(y_cold))
+
+    y_gd = eng.run(prog, x, graph_data=as_graph_data(live.active.pgraph))
+    assert np.array_equal(np.asarray(y_gd), np.asarray(y_cold))
+    assert eng.stats.compiles == 1
+
+
+def test_incremental_serving_on_mesh_path():
+    """The placement-scheduled multi-device path stages patched tiles
+    transparently (1-device mesh: same code path, no multi-host dep)."""
+    rng = np.random.default_rng(29)
+    g_ref = _g(seed=6)
+    store = GraphVersionStore(g_ref, geometry=GEOM)
+    live = LiveGraphServer(store)
+    eng = _engine()
+    eng.compile("b1", live)
+    d = _random_delta(g_ref, rng, n_add=4, n_rm=1)
+    g_ref = d.apply_to(g_ref)
+    live.apply(d)
+    x = np.asarray(G.random_features(g_ref, seed=3))
+    y_mesh = eng.run(eng.compile("b1", live), x, mesh=1)
+    cold = _engine()
+    y_cold = cold.run(cold.compile("b1", g_ref), x)
+    assert np.array_equal(np.asarray(y_mesh), np.asarray(y_cold))
+    assert eng.stats.compiles == 1
+
+
+def test_batched_serving_on_live_version():
+    """submit_batch over a live handle: one pass, correct tiles, and
+    mixed-version batches are refused (misroute guard)."""
+    g = _g(seed=9)
+    store = GraphVersionStore(g, geometry=GEOM)
+    live = LiveGraphServer(store)
+    eng = _engine()
+    xs = [np.asarray(G.random_features(g, seed=s)) for s in (1, 2, 3)]
+    reqs = [InferenceRequest("b1", live, x) for x in xs]
+    resps = eng.submit_batch(reqs)
+    singles = [eng.submit(InferenceRequest("b1", live, x)) for x in xs]
+    for b, s in zip(resps, singles):
+        # batched passes replay a vmapped executable: allclose, same as
+        # the repo's other batch-vs-single equivalences
+        np.testing.assert_allclose(np.asarray(b.output),
+                                   np.asarray(s.output),
+                                   rtol=1e-5, atol=1e-6)
+    v0g = live.active.as_graph()
+    live.apply(GraphDelta(live.n_vertices).add_edge(1, 2, 0.5))
+    v1g = live.active.as_graph()
+    mixed = [InferenceRequest("b1", v0g, xs[0]),
+             InferenceRequest("b1", v1g, xs[1])]
+    with pytest.raises(ValueError, match="mix graph versions"):
+        eng.submit_batch(mixed)
+
+
+# --------------------------------------------------------------------------- #
+# Cutover under load: zero dropped, zero misrouted, retirees reclaimed.
+# --------------------------------------------------------------------------- #
+def test_cutover_under_load_zero_dropped_zero_misrouted():
+    g = _g(seed=12)
+    store = GraphVersionStore(g, geometry=GEOM)
+    pool = OverlayPool(n_overlays=2, geometry=GEOM, n_pes=4)
+    live = LiveGraphServer(store, metrics=pool.metrics)
+    loop = ServeLoop(pool, max_batch=4, max_wait_us=1e9)
+    rng = np.random.default_rng(31)
+    feats = [np.asarray(G.random_features(g, seed=s)) for s in range(4)]
+
+    # Reference outputs per version, computed BEFORE any reclamation.
+    ref_eng = _engine()
+    y_ref = {0: {i: np.asarray(ref_eng.run(
+        ref_eng.compile("b1", store.head.as_graph()), f))
+        for i, f in enumerate(feats)}}
+
+    expected = {}
+    n = 0
+    try:
+        for phase in range(3):
+            for i in range(6):
+                rid = f"p{phase}r{i}"
+                loop.submit(InferenceRequest(
+                    "b1", live, feats[i % 4], request_id=rid))
+                expected[rid] = (live.active.vid, i % 4)
+                n += 1
+            if phase < 2:
+                d = _random_delta(g, rng, n_add=2, n_rm=0)
+                v = live.apply(d)
+                y_ref[v.vid] = {i: np.asarray(ref_eng.run(
+                    ref_eng.compile("b1", v.as_graph()), f))
+                    for i, f in enumerate(feats)}
+        resps = loop.drain()
+    finally:
+        loop.shutdown()
+
+    assert len(resps) == n, "requests were dropped across cutover"
+    by_rid = {r.request_id: r for r in resps}
+    for rid, (vid, fi) in expected.items():
+        r = by_rid[rid]
+        assert r.graph_name.endswith(f"@v{vid}"), \
+            f"{rid} admitted on v{vid} but served on {r.graph_name}"
+        np.testing.assert_allclose(
+            np.asarray(r.output), y_ref[vid][fi], rtol=1e-5, atol=1e-6,
+            err_msg=f"{rid} output does not match its pinned version")
+
+    # retired versions drained -> reclaimed; head survives
+    assert sorted(store.versions()) == [live.active.vid]
+    assert live.reclaimed == [0, 1]
+    assert live.cutovers == 2
+    # one compile in the whole pool: every version shared the program
+    assert sum(e.stats.compiles for e in pool.engines) == 1
+
+    snap = pool.metrics.snapshot(max_batch=4)
+    lg = snap["livegraph"]
+    assert lg["active_version"] == live.active.vid
+    assert lg["cutovers"] == 2
+    assert lg["versions_reclaimed"] == 2
+    assert sum(lg["requests_per_version"].values()) == n
+
+
+def test_metrics_without_live_graphs_have_no_livegraph_section():
+    from repro.runtime import Metrics
+    assert "livegraph" not in Metrics().snapshot()
+
+
+# --------------------------------------------------------------------------- #
+# Satellites: CSR invalidation token, manifest tile stats.
+# --------------------------------------------------------------------------- #
+def test_in_csr_mutation_token_invalidates():
+    g = _g()
+    csr0 = g.in_csr()
+    assert g.in_csr() is csr0                 # memoized
+    # in-place content mutation is invisible to identity checks...
+    g.src[0] = (g.src[0] + 1) % g.n_vertices
+    assert g.in_csr() is csr0                 # ...hence the hazard
+    token = g.invalidate_views()              # the fix: bump per delta
+    assert token == 1 and g.mutation_token == 1
+    csr1 = g.in_csr()
+    assert csr1 is not csr0
+    order = np.lexsort((g.src, g.dst))
+    assert np.array_equal(csr1.src, g.src[order])
+
+
+def test_graph_signature_tracks_mutation_token():
+    g = _g()
+    s0 = graph_signature(g)
+    g.weight[0] += 1.0
+    assert graph_signature(g) == s0           # the stale memo
+    g.invalidate_views()
+    assert graph_signature(g) != s0
+
+
+def test_manifest_tile_stats_present_and_rebind_refreshes(tmp_path):
+    g = _g(seed=2)
+    eng = _engine()
+    prog = eng.compile("b1", g)
+    ts = prog.manifest["tile_stats"]
+    pg = prog.pgraph
+    assert ts["n_tiles"] == len(pg.tiles)
+    assert ts["total_nnz"] == pg.total_nnz()
+    some = next(iter(ts["tiles"].values()))
+    assert {"nnz", "slices", "width", "density"} <= set(some)
+    # round-trips .gagi
+    path = str(tmp_path / "live.gagi")
+    prog.save(path)
+    assert eng.load(path).manifest["tile_stats"] == ts
+
+    # rebinding to a patched version refreshes stats + version labels
+    store = GraphVersionStore(g, geometry=GEOM)
+    live = LiveGraphServer(store)
+    eng.submit(InferenceRequest("b1", live,
+                                np.asarray(G.random_features(g, seed=1))))
+    live.apply(GraphDelta(g.n_vertices).add_edge(0, 1, 0.5)
+               .add_edge(2, 3, 0.5))
+    bound = eng.compile("b1", live)
+    assert bound.manifest["graph_version"] == 1
+    assert bound.manifest["tile_stats"]["total_nnz"] == \
+        ts["total_nnz"] + 2
+    assert bound.manifest["graph_name"].endswith("@v1")
+    assert "content_signature" in bound.manifest
+    # the cached program's manifest is untouched (shallow-copy contract)
+    assert "graph_version" not in prog.manifest
+
+
+def test_version_bind_refuses_geometry_mismatch():
+    g = _g()
+    store = GraphVersionStore(g, geometry=GEOM)
+    other = Engine(geometry=PartitionConfig(n1=64, n2=8), n_pes=4)
+    prog = other.compile("b1", g)
+    with pytest.raises(ValueError, match="geometry"):
+        store.head.bind(prog)
+
+
+def test_block_growth_changes_structure_and_stays_correct():
+    """Adding vertices past the padded block capacity grows the tile
+    grid: a structural change — new cache key, recompile — that still
+    serves bit-identical results."""
+    g = _g(nv=60, ne=260, seed=15)
+    store = GraphVersionStore(g, geometry=GEOM)
+    live = LiveGraphServer(store)
+    eng = _engine()
+    eng.compile("b1", live)
+    nb0 = store.head.pgraph.n_blocks
+    d = GraphDelta(g.n_vertices, feat_dim=g.feat_dim)
+    first = d.add_vertex()
+    for _ in range(GEOM.n1):                    # cross a block boundary
+        d.add_vertex()
+    d.add_edge(first, 0, 1.0)
+    g_ref = d.apply_to(g)
+    v = live.apply(d)
+    assert v.pgraph.n_blocks == nb0 + 1
+    assert v.stats.structural_change
+    x = np.asarray(G.random_features(g_ref, seed=8))
+    resp = eng.submit(InferenceRequest("b1", live, x))
+    assert not resp.cache_hit and eng.stats.compiles == 2
+    cold = _engine()
+    y_cold = cold.run(cold.compile("b1", g_ref), x)
+    assert np.array_equal(np.asarray(resp.output), np.asarray(y_cold))
