@@ -1,0 +1,53 @@
+"""CI gate: compare fresh BENCH_*.json against committed baselines.
+
+Usage::
+
+    python benchmarks/check_trajectory.py \
+        --baseline-dir /tmp/bench_baselines --fresh-dir . \
+        --out TRAJECTORY.md
+
+Exits 1 when any gated metric leaves its tolerance band (see
+``repro.obs.trajectory.DEFAULT_SPECS``); prints the markdown report
+either way.  Files whose ``mode`` differs between baseline and fresh
+run (e.g. a committed full-scale run vs a CI ``--smoke`` run) are
+skipped, not failed.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs.trajectory import DEFAULT_SPECS, compare_dirs  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline-dir", required=True,
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--fresh-dir", required=True,
+                    help="directory holding the freshly produced files")
+    ap.add_argument("--out", default=None,
+                    help="also write the markdown report here")
+    ap.add_argument("--files", nargs="*", default=None,
+                    help="subset of registered files to compare")
+    args = ap.parse_args(argv)
+
+    report = compare_dirs(args.baseline_dir, args.fresh_dir,
+                          DEFAULT_SPECS, files=args.files)
+    md = report.to_markdown()
+    print(md)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(md + "\n")
+    if not report.ok:
+        print(f"trajectory gate FAILED: {len(report.regressions)} "
+              f"metric(s) regressed", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -9,8 +9,10 @@ model and the report columns.
 from __future__ import annotations
 
 import os
+import subprocess
 import sys
 import time
+from datetime import datetime, timezone
 from typing import Dict, List, Tuple
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -80,13 +82,29 @@ def emit(rows: List[str]) -> None:
         print(r, flush=True)
 
 
+def _git(*args: str) -> str:
+    try:
+        return subprocess.run(
+            ["git", *args], capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        return ""
+
+
 def provenance(seed: int) -> Dict[str, object]:
     """Run context embedded in every BENCH_*.json so run-to-run variance
-    (noisy CI hosts, backend differences) is attributable."""
+    (noisy CI hosts, backend differences) — and the trajectory gate's
+    comparisons — are attributable to a specific commit and time."""
+    sha = _git("rev-parse", "HEAD")
     return {
         "seed": seed,
         "jax_backend": jax.default_backend(),
         "jax_version": jax.__version__,
         "cpu_count": os.cpu_count(),
         "platform": sys.platform,
+        "git_sha": sha or "unknown",
+        "git_dirty": bool(_git("status", "--porcelain")) if sha else False,
+        "timestamp": datetime.now(timezone.utc).isoformat(
+            timespec="seconds"),
     }

@@ -19,6 +19,8 @@ import time
 import warnings
 from typing import Optional
 
+from repro.obs.tracer import get_tracer
+
 from .gnn_builders import BENCHMARKS
 from .graph import Graph
 from .ir import ModelIR
@@ -57,23 +59,34 @@ def run_pipeline(
 ) -> CompileResult:
     """The §6 software-compilation pipeline (internal entry point)."""
     opts = opts or CompileOptions()
+    tracer = get_tracer()
     t0 = time.perf_counter()
 
     m = model.copy()
     # Step 1: computation order optimization.
-    orep = order_opt.run(m, enabled=opts.order_opt)
+    with tracer.span("order_opt", cat="compile", track="compile"):
+        orep = order_opt.run(m, enabled=opts.order_opt)
     # Step 2: layer fusion.
-    frep = fusion.run(m, enabled=opts.fusion)
+    with tracer.span("fusion", cat="compile", track="compile") as sp:
+        frep = fusion.run(m, enabled=opts.fusion)
+        sp.add(layers_before=frep.layers_before,
+               layers_after=frep.layers_after)
     # Step 3: data partitioning (O(|V| + |E|)).
-    f_max = max(max(l.f_in, l.f_out) for l in m.layers.values())
-    cfg = opts.partition or choose_partition(
-        g.n_vertices, f_max, opts.vmem_budget_bytes)
-    pg = partition_graph(g, cfg)
+    with tracer.span("partition", cat="compile", track="compile") as sp:
+        f_max = max(max(l.f_in, l.f_out) for l in m.layers.values())
+        cfg = opts.partition or choose_partition(
+            g.n_vertices, f_max, opts.vmem_budget_bytes)
+        pg = partition_graph(g, cfg)
+        sp.add(n1=cfg.n1, n2=cfg.n2, blocks=pg.n_blocks)
     # Step 4: kernel mapping + task scheduling.
-    prog = kernel_map.run(m, pg, n_pes=opts.n_pes)
-    srep = schedule.run(prog, n_pes=opts.n_pes)
+    with tracer.span("kernel_map", cat="compile", track="compile"):
+        prog = kernel_map.run(m, pg, n_pes=opts.n_pes)
+    with tracer.span("schedule", cat="compile", track="compile"):
+        srep = schedule.run(prog, n_pes=opts.n_pes)
     # Code generation.
-    binary = assemble(prog.all_instrs())
+    with tracer.span("codegen", cat="compile", track="compile") as sp:
+        binary = assemble(prog.all_instrs())
+        sp.add(binary_bytes=len(binary))
 
     t_loc = time.perf_counter() - t0
     return CompileResult(program=prog, binary=binary, t_loc=t_loc,

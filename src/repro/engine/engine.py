@@ -42,6 +42,7 @@ from repro.core.gnn_builders import build
 from repro.core.graph import Graph
 from repro.core.ir import ModelIR
 from repro.core.passes.partition import PartitionConfig
+from repro.obs.tracer import get_tracer
 
 from .cache import LRUCache
 from .executor import BinaryExecutor, ExecStats, ensure_placement
@@ -345,9 +346,12 @@ class Engine:
             graph = lv.as_graph()
         key = _key or self.cache_key(model, graph, seed=seed,
                                      order_opt=order_opt, fusion=fusion)
+        tracer = get_tracer()
         if use_cache:
             cached = self.cache.get(key)
             if cached is not None:
+                tracer.instant("cache_hit", cat="compile",
+                               track="compile", args={"key": key[:12]})
                 if n_devices is not None:
                     ensure_placement(cached, n_devices)
                 if lv is not None:
@@ -356,12 +360,18 @@ class Engine:
                     return dataclasses.replace(
                         cached, default_residency=residency)
                 return cached
-        model_ir = build(model, graph, seed) if isinstance(model, str) \
-            else model
-        opts = CompileOptions(order_opt=order_opt, fusion=fusion,
-                              n_pes=self.n_pes, partition=self.geometry,
-                              vmem_budget_bytes=self.vmem_budget_bytes)
-        cr = run_pipeline(model_ir, graph, opts)
+        with tracer.span("compile", cat="compile", track="compile",
+                         args={"key": key[:12],
+                               "graph": graph.name}) as sp:
+            model_ir = build(model, graph, seed) \
+                if isinstance(model, str) else model
+            opts = CompileOptions(order_opt=order_opt, fusion=fusion,
+                                  n_pes=self.n_pes,
+                                  partition=self.geometry,
+                                  vmem_budget_bytes=self.vmem_budget_bytes)
+            cr = run_pipeline(model_ir, graph, opts)
+            sp.add(t_loc_s=round(cr.t_loc, 6),
+                   binary_bytes=len(cr.binary))
         prog = from_program(cr.program, binary=cr.binary, t_loc=cr.t_loc,
                             cache_key=key, graph_name=graph.name,
                             source=cr, n_devices=n_devices)

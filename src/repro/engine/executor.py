@@ -64,9 +64,22 @@ import numpy as np
 from repro.core.ack import ACK
 from repro.core.ir import Activation, AggOp, LayerType
 from repro.core.reference import apply_activation
+from repro.obs.tracer import get_tracer
 
 from .decoder import LayerPlan, TilePlan
 from .program import CompiledProgram
+
+# Kernel mode a layer family's tiles execute in (paper §5: the overlay's
+# GEMM / SpDMM / SDDMM / vector / activation compute modes) — what the
+# per-tile execution profile records next to nnz/density.
+_KERNEL_MODES = {
+    LayerType.AGGREGATE: "spdmm",
+    LayerType.LINEAR: "gemm",
+    LayerType.VECTOR_INNER: "sddmm",
+    LayerType.VECTOR_ADD: "vadd",
+    LayerType.ACTIVATION: "act",
+    LayerType.BATCHNORM: "act",
+}
 
 
 def _tile_arrays(pg, gtiles, j: int, k: int, s: int):
@@ -132,7 +145,24 @@ class ExecStats:
         self.peak_device_bytes = max(self.peak_device_bytes,
                                      other.peak_device_bytes)
         if other.per_device is not None:
-            self.per_device = other.per_device
+            # MERGE per-device counters (keyed by device index) so the
+            # lifetime ``total`` keeps coherent per-device tile-op sums
+            # across mesh runs instead of reporting only the last run.
+            if self.per_device is None:
+                self.per_device = [dict(d) for d in other.per_device]
+            else:
+                by_dev = {d.get("device"): d for d in self.per_device}
+                for od in other.per_device:
+                    mine = by_dev.get(od.get("device"))
+                    if mine is None:
+                        self.per_device.append(dict(od))
+                        continue
+                    for k, v in od.items():
+                        if k in ("device", "blocks"):
+                            mine[k] = v          # identity / geometry
+                        else:
+                            mine[k] = mine.get(k, 0) + v
+                self.per_device.sort(key=lambda d: d.get("device", 0))
 
     @property
     def device_imbalance(self) -> float:
@@ -635,6 +665,12 @@ class BinaryExecutor:
         # with event in {"alloc", "free"} whenever a layer output is
         # materialized or released (tests count liveness through this).
         self.liveness_hook = None
+        # Per-tile execution profiling (density + kernel mode, the
+        # Dynasparse remapper's input): collected whenever tracing is
+        # enabled OR this flag is set, folded into the program manifest
+        # as ``exec_profile`` at the end of each run.
+        self.profile_tiles = False
+        self._tile_records: Optional[dict] = None
         self.stats = ExecStats()        # per-run (last run)
         self.total = ExecStats()        # lifetime accumulation
 
@@ -740,6 +776,82 @@ class BinaryExecutor:
                                  else ""))
 
     # ------------------------------------------------------------------ #
+    # Per-tile execution profile (Dynasparse-style, see ROADMAP): which
+    # kernel mode ran each graph tile, how often, against what density.
+    # ------------------------------------------------------------------ #
+    def _begin_profile(self) -> None:
+        if get_tracer().enabled or self.profile_tiles:
+            self._tile_records = {"modes": {}, "tiles": {}}
+        else:
+            self._tile_records = None
+
+    def _profile_tile(self, kern: _ShardKernel, tp: TilePlan) -> None:
+        """Record one TilePlan dispatch.  Graph (ELL) tiles are keyed
+        (j, k, s) so their nnz/density can be joined at flush time;
+        dense GEMM / vector tiles only feed the kernel-mode histogram."""
+        recs = self._tile_records
+        if recs is None:
+            return
+        lt = kern.lp.layer_type
+        mode = _KERNEL_MODES[lt]
+        tiles = recs["tiles"]
+        if lt == LayerType.AGGREGATE:
+            ops = len(tp.compute)
+            for ins in tp.compute:
+                key = (tp.out_j, ins.args[1], ins.args[3] >> 1)
+                r = tiles.get(key)
+                if r is None:
+                    tiles[key] = r = {"kernel": mode, "ops": 0}
+                r["ops"] += 1
+        elif lt == LayerType.VECTOR_INNER:
+            ops = len(tp.compute)
+            key = (tp.out_j, tp.tile_k, tp.slice_id)
+            r = tiles.get(key)
+            if r is None:
+                tiles[key] = r = {"kernel": mode, "ops": 0}
+            r["ops"] += ops
+        elif lt == LayerType.LINEAR:
+            ops = len(tp.compute)
+        else:
+            ops = 1
+        recs["modes"][mode] = recs["modes"].get(mode, 0) + ops
+
+    def _flush_profile(self, prog: CompiledProgram) -> None:
+        """Fold the run's per-tile records into the program manifest's
+        ``exec_profile`` section (round-trips ``.gagi``): kernel-mode
+        op histogram + per-graph-tile nnz/density/ops/mode — exactly
+        the observed-density input a bind-time kernel remapper needs."""
+        recs, self._tile_records = self._tile_records, None
+        if recs is None:
+            return
+        pg = prog.pgraph
+        prof = prog.manifest.get("exec_profile")
+        if prof is None:
+            prof = {"runs": 0, "kernel_modes": {}, "tiles": {},
+                    "density_histogram": [0] * 10}
+            prog.manifest["exec_profile"] = prof
+        prof["runs"] += 1
+        for mode, n in recs["modes"].items():
+            prof["kernel_modes"][mode] = \
+                prof["kernel_modes"].get(mode, 0) + int(n)
+        for (j, k, s), r in recs["tiles"].items():
+            slices = pg.tiles.get((j, k))
+            if slices is None or s >= len(slices):
+                continue                    # graph-as-data: template tile
+            t = slices[s]
+            slots = int(t.cols.size)
+            density = (int(t.nnz) / slots) if slots else 0.0
+            key = f"{j}:{k}:{s}"
+            entry = prof["tiles"].get(key)
+            if entry is None:
+                entry = {"ops": 0}
+                prof["tiles"][key] = entry
+                prof["density_histogram"][min(int(density * 10), 9)] += 1
+            entry.update(nnz=int(t.nnz), slots=slots,
+                         density=round(density, 6), kernel=r["kernel"])
+            entry["ops"] += int(r["ops"])
+
+    # ------------------------------------------------------------------ #
     def _watermark(self, event: str, layer_id: int, vals: Dict,
                    edge_vals: Dict) -> None:
         live = len(vals) + len(edge_vals)
@@ -789,7 +901,11 @@ class BinaryExecutor:
             return self._run_host(prog, [x], weights)[0]
         self._gate_device_budget(prog, int(x.shape[1]))
         self.stats = ExecStats(runs=1)
-        plan = prog.plan()
+        tracer = get_tracer()
+        self._begin_profile()
+        with tracer.span("decode", cat="exec", track="exec:device",
+                         args={"cached": prog._plan is not None}):
+            plan = prog.plan()
         man = prog.manifest
         pg = prog.pgraph
         res = self._residency(prog)
@@ -827,6 +943,11 @@ class BinaryExecutor:
             h_in = (vals.get(feat_parents[0], x_pad) if feat_parents
                     else x_pad)
             lt = lp.layer_type
+            lspan = tracer.span(
+                f"layer{lp.layer_id}", cat="exec", track="exec:device",
+                args={"type": LayerType(lt).name,
+                      "kernel": _KERNEL_MODES[lt], "step": t,
+                      "tiles": len(lp.tiles)})
 
             if lt in (LayerType.ACTIVATION, LayerType.BATCHNORM) \
                     and lp.on_edges:
@@ -847,6 +968,7 @@ class BinaryExecutor:
                 if kern.edge_valued:
                     ew = jnp.zeros((pg.n_edges + 1,), jnp.float32)
                     for tp in self._block_order(lp):
+                        self._profile_tile(kern, tp)
                         acc = kern.tile(tp, env)
                         _, _, mask, epos = env.graph_tile(
                             tp.out_j, tp.tile_k, tp.slice_id)
@@ -858,17 +980,20 @@ class BinaryExecutor:
                 else:
                     out_tiles: Dict[Tuple[int, int], jnp.ndarray] = {}
                     for tp in self._block_order(lp):
+                        self._profile_tile(kern, tp)
                         v = kern.tile(tp, env)
                         out_tiles[(tp.out_i, tp.out_j)] = v
                         if not self.overlap:
                             jax.block_until_ready(v)
                     vals[lp.layer_id] = self._assemble(
                         out_tiles, nb, kern.out_width(io) // n2)
+            lspan.add(tile_ops=self.stats.tile_ops).done()
             self._watermark("alloc", lp.layer_id, vals, edge_vals)
             # Interval liveness: drop outputs whose last consumer just
             # ran, so peak memory follows the live-set, not model depth.
             self._free_dead(t, sink, last_use, vals, edge_vals)
 
+        self._flush_profile(prog)
         self.total.add(self.stats)
         return vals[sink][:nv, :man["sink_f_out"]]
 
@@ -973,8 +1098,10 @@ class BinaryExecutor:
     # ------------------------------------------------------------------ #
     def _stage(self, arrs: Dict[str, np.ndarray]):
         """Ship one working set host -> device; returns (staged, bytes)."""
-        staged = {k: jax.device_put(a) for k, a in arrs.items()}
-        nbytes = sum(_nbytes(a) for a in arrs.values())
+        with get_tracer().span("stage", cat="h2d", track="h2d") as sp:
+            staged = {k: jax.device_put(a) for k, a in arrs.items()}
+            nbytes = sum(_nbytes(a) for a in arrs.values())
+            sp.add(bytes=nbytes, arrays=len(arrs))
         self.stats.h2d_bytes += nbytes
         return staged, nbytes
 
@@ -988,9 +1115,17 @@ class BinaryExecutor:
         ops and returns ``(write_back, device_value)`` pairs."""
         if not order:
             return
+        tracer = get_tracer()
         staged_next, next_bytes = self._stage(build(order[0]))
         for idx, j in enumerate(order):
             staged, cur_bytes = staged_next, next_bytes
+            # The compute span covers dispatch THROUGH write-back; the
+            # next shard's stage span is emitted inside this window, so
+            # the trace shows the double-buffer overlap directly (the
+            # acceptance property: stage and compute spans intersect).
+            cspan = tracer.span("compute", cat="exec", track="exec:host",
+                                args={"shard": int(j),
+                                      "staged_bytes": cur_bytes})
             pending = compute(j, staged)
             if idx + 1 < len(order):
                 staged_next, next_bytes = self._stage(build(order[idx + 1]))
@@ -1014,6 +1149,7 @@ class BinaryExecutor:
                        if lanes > 1 else ""))
             for write, val in pending:
                 write(np.asarray(val))          # D2H; blocks shard j only
+            cspan.add(tiles=len(pending)).done()
             self.stats.shards_streamed += 1
 
     def _run_host(self, prog: CompiledProgram, xs: List[Any],
@@ -1025,7 +1161,12 @@ class BinaryExecutor:
         once for the whole batch, each lane adds only its source
         sub-fibers (``stage_lane``) — host-path batching."""
         self.stats = ExecStats(runs=1)
-        plan = prog.plan()
+        tracer = get_tracer()
+        self._begin_profile()
+        with tracer.span("decode", cat="exec", track="exec:host",
+                         args={"cached": prog._plan is not None,
+                               "lanes": len(xs)}):
+            plan = prog.plan()
         man = prog.manifest
         pg = prog.pgraph
         res = self._residency(prog)
@@ -1059,6 +1200,11 @@ class BinaryExecutor:
             ewl = meta.get("edge_weight_layer")
             feat_parents = [p for p in meta["parents"] if p != ewl]
             lt = lp.layer_type
+            lspan = tracer.span(
+                f"layer{lp.layer_id}", cat="exec", track="exec:host",
+                args={"type": LayerType(lt).name,
+                      "kernel": _KERNEL_MODES[lt], "step": t,
+                      "tiles": len(lp.tiles), "lanes": L})
 
             if lt in (LayerType.ACTIVATION, LayerType.BATCHNORM) \
                     and lp.on_edges:
@@ -1104,6 +1250,8 @@ class BinaryExecutor:
                     for ln in range(L):
                         env = _HostEnv(pg, staged, ln)
                         for tp in by_j[j]:
+                            if ln == 0:
+                                self._profile_tile(kern, tp)
                             pending.append((kern.host_write(outs[ln], tp),
                                             kern.tile(tp, env)))
                     return pending
@@ -1115,6 +1263,8 @@ class BinaryExecutor:
                             outs[ln][: pg.n_edges]
                     else:
                         vals[ln][lp.layer_id] = outs[ln]
+            lspan.add(tile_ops=self.stats.tile_ops,
+                      h2d_bytes=self.stats.h2d_bytes).done()
             self._watermark("alloc", lp.layer_id, vals[0], edge_vals[0])
             # Liveness hooks observe lane 0 only (one event per value,
             # as in a single run); every lane still frees its outputs.
@@ -1129,6 +1279,7 @@ class BinaryExecutor:
 
         ys = [jnp.asarray(vals[ln][sink][:nv, : man["sink_f_out"]])
               for ln in range(L)]
+        self._flush_profile(prog)
         self.total.add(self.stats)
         return ys
 
@@ -1235,13 +1386,17 @@ class BinaryExecutor:
 
         D = len(slabs)
         rows = int(slabs[0].shape[0])
-        global_x = jax.make_array_from_single_device_arrays(
-            (D * rows, width), NamedSharding(mesh, P(axis)), list(slabs))
-        fn = _shard_map(lambda v: jax.lax.all_gather(v, axis),
-                        mesh=mesh, in_specs=P(axis), out_specs=P(),
-                        check_vma=False)
-        gathered = fn(global_x)          # [D, rows, f], replicated
-        return [jax.device_put(gathered, d) for d in devs]
+        with get_tracer().span(
+                "halo_exchange", cat="comm", track="halo",
+                args={"devices": D, "bytes": D * rows * width * 4}):
+            global_x = jax.make_array_from_single_device_arrays(
+                (D * rows, width), NamedSharding(mesh, P(axis)),
+                list(slabs))
+            fn = _shard_map(lambda v: jax.lax.all_gather(v, axis),
+                            mesh=mesh, in_specs=P(axis), out_specs=P(),
+                            check_vma=False)
+            gathered = fn(global_x)      # [D, rows, f], replicated
+            return [jax.device_put(gathered, d) for d in devs]
 
     def _run_mesh(self, prog: CompiledProgram, x,
                   weights: Optional[Dict[str, np.ndarray]] = None,
@@ -1249,8 +1404,13 @@ class BinaryExecutor:
         axis = mesh.axis_names[0]
         D = int(mesh.size)
         devs = list(np.asarray(mesh.devices).reshape(-1))
+        tracer = get_tracer()
+        self._begin_profile()
         pl = ensure_placement(prog, D)
-        plan = prog.plan()
+        with tracer.span("decode", cat="exec", track="exec:dev0",
+                         args={"cached": prog._plan is not None,
+                               "devices": D}):
+            plan = prog.plan()
         man = prog.manifest
         pg = prog.pgraph
         res = self._residency(prog)
@@ -1339,6 +1499,11 @@ class BinaryExecutor:
                 outs: List[Any] = []
                 for d in range(D):
                     before = self.stats.tile_ops
+                    dspan = tracer.span(
+                        f"layer{lp.layer_id}", cat="exec",
+                        track=f"exec:dev{d}",
+                        args={"type": LayerType(lt).name,
+                              "kernel": _KERNEL_MODES[lt], "step": t})
                     env = _MeshEnv(
                         pg, place,
                         gathered=gathered[d] if gather else None,
@@ -1357,6 +1522,7 @@ class BinaryExecutor:
                         ew = jax.device_put(ew, devs[d])
                         for j in order:
                             for tp in by_j[j]:
+                                self._profile_tile(kern, tp)
                                 acc = kern.tile(tp, env)
                                 tile = pg.tiles[(j, tp.tile_k)][
                                     tp.slice_id]
@@ -1370,6 +1536,7 @@ class BinaryExecutor:
                         tiles_out: Dict[Tuple[int, int], Any] = {}
                         for j in order:
                             for tp in by_j[j]:
+                                self._profile_tile(kern, tp)
                                 tiles_out[(tp.out_i, tp.out_j)] = \
                                     kern.tile(tp, env)
                             per_dev[d]["shards"] += 1
@@ -1388,6 +1555,8 @@ class BinaryExecutor:
                         outs.append(jnp.concatenate(rows, axis=0))
                     per_dev[d]["tile_ops"] += \
                         self.stats.tile_ops - before
+                    dspan.add(tile_ops=self.stats.tile_ops
+                              - before).done()
                 if kern.edge_valued:
                     edge_vals[lp.layer_id] = outs
                 else:
@@ -1405,6 +1574,7 @@ class BinaryExecutor:
         self.stats.per_device = per_dev
         self.stats.halo_bytes = sum(d["halo_bytes"] for d in per_dev)
         self.stats.peak_device_bytes = peak_dev
+        self._flush_profile(prog)
         self.total.add(self.stats)
         out = np.zeros((nb * n1, int(vals[sink][0].shape[1])),
                        np.float32)

@@ -32,6 +32,8 @@ from __future__ import annotations
 import threading
 from typing import Dict, List, Optional, Set, Tuple
 
+from repro.obs.tracer import get_tracer
+
 from .delta import GraphDelta
 from .versioning import GraphVersion, GraphVersionStore
 
@@ -116,6 +118,8 @@ class LiveGraphServer:
             self.reclaimed.append(vid)
             if self.metrics is not None:
                 self.metrics.record_version_reclaimed(vid)
+            get_tracer().instant("reclaim", cat="livegraph",
+                                 track="livegraph", args={"vid": vid})
 
     # ------------------------------------------------------------------ #
     # Cutover.
@@ -138,9 +142,15 @@ class LiveGraphServer:
             self._retired.discard(version.vid)   # rollback re-arms it
             self.cutovers += 1
             self._retired.add(old.vid)
+            pinned_old = self._inflight.get(old.vid, 0)
             if self.metrics is not None:
-                self.metrics.record_cutover(old.vid, version.vid)
-            if self._inflight.get(old.vid, 0) <= 0:
+                self.metrics.record_cutover(old.vid, version.vid,
+                                            pinned_old=pinned_old)
+            get_tracer().instant(
+                "cutover", cat="livegraph", track="livegraph",
+                args={"from": old.vid, "to": version.vid,
+                      "pinned_old": pinned_old})
+            if pinned_old <= 0:
                 self._reclaim(old.vid)
             return version
 

@@ -1,0 +1,25 @@
+"""repro.obs — observability for the GraphAGILE stack.
+
+Two halves:
+
+* :mod:`repro.obs.tracer` — structured tracing (nestable spans,
+  counters, instant events) exported as Chrome/Perfetto trace-event
+  JSON, threaded through the compiler passes, every executor residency
+  path, and the serving runtime.  Zero overhead when disabled.
+* :mod:`repro.obs.trajectory` — per-metric tolerance-band comparison
+  of fresh BENCH_*.json artifacts against committed baselines, the
+  engine behind the ``benchmarks/check_trajectory.py`` CI gate.
+"""
+from .tracer import (NullTracer, Tracer, disable_tracing,
+                     enable_tracing, get_tracer, set_tracer, tracing)
+from .trajectory import (DEFAULT_SPECS, FileReport, MetricResult,
+                         MetricSpec, TrajectoryReport, compare_dirs,
+                         compare_docs, compare_metrics, lookup)
+
+__all__ = [
+    "Tracer", "NullTracer", "get_tracer", "set_tracer",
+    "enable_tracing", "disable_tracing", "tracing",
+    "MetricSpec", "MetricResult", "FileReport", "TrajectoryReport",
+    "DEFAULT_SPECS", "compare_metrics", "compare_docs", "compare_dirs",
+    "lookup",
+]

@@ -38,13 +38,23 @@ class _Series:
         self.total_t_loc = 0.0
         self.total_t_loh = 0.0
         self.latencies: Deque[float] = deque(maxlen=max_samples)
+        # Phase split (populated when the loop reports it): where a
+        # request's experienced latency went — queued vs executing.
+        self.waits: Deque[float] = deque(maxlen=max_samples)
+        self.executes: Deque[float] = deque(maxlen=max_samples)
 
-    def record(self, resp, latency_s: float) -> None:
+    def record(self, resp, latency_s: float,
+               queue_wait_s: Optional[float] = None,
+               execute_s: Optional[float] = None) -> None:
         self.requests += 1
         self.cache_hits += int(resp.cache_hit)
         self.total_t_loc += resp.t_loc
         self.total_t_loh += resp.t_loh
         self.latencies.append(latency_s)
+        if queue_wait_s is not None:
+            self.waits.append(queue_wait_s)
+        if execute_s is not None:
+            self.executes.append(execute_s)
 
     def record_batch(self, size: int) -> None:
         self.batches += 1
@@ -59,10 +69,21 @@ class _Series:
             "requests": self.requests,
             "cache_hit_rate": round(hit_rate, 6),
             "p50_latency_ms": round(percentile(lat, 50) * 1e3, 6),
+            "p90_latency_ms": round(percentile(lat, 90) * 1e3, 6),
             "p99_latency_ms": round(percentile(lat, 99) * 1e3, 6),
+            "max_latency_ms": round(max(lat) * 1e3, 6) if lat else 0.0,
             "batches": self.batches,
             "mean_batch_size": round(mean_batch, 6),
         }
+        if self.waits or self.executes:
+            w, e = list(self.waits), list(self.executes)
+            mean = lambda xs: (sum(xs) / len(xs)) if xs else 0.0  # noqa: E731
+            out["queue_wait_ms"] = {
+                "mean": round(mean(w) * 1e3, 6),
+                "p99": round(percentile(w, 99) * 1e3, 6)}
+            out["execute_ms"] = {
+                "mean": round(mean(e) * 1e3, 6),
+                "p99": round(percentile(e, 99) * 1e3, 6)}
         if max_batch:
             out["batch_occupancy"] = round(mean_batch / max_batch, 6)
         return out
@@ -89,6 +110,12 @@ class Metrics:
         self.cutovers = 0
         self.versions_reclaimed = 0
         self._version_requests: Dict[int, int] = {}
+        # Per-cutover version-skew log: requests still pinned to the
+        # outgoing version at swap time (bounded; oldest dropped).
+        self._cutover_log: Deque[dict] = deque(maxlen=256)
+        # Per-request phase samples (latency joined to its breakdown),
+        # so a p99 number can be traced to where the time went.
+        self._phase_samples: Deque[dict] = deque(maxlen=max_samples)
 
     # ------------------------------------------------------------------ #
     def _series(self, key: str) -> _Series:
@@ -96,13 +123,35 @@ class Metrics:
             self._per_key[key] = _Series(self.max_samples)
         return self._per_key[key]
 
-    def record_response(self, resp, latency_s: float) -> None:
+    def record_response(self, resp, latency_s: float,
+                        queue_wait_s: Optional[float] = None,
+                        execute_s: Optional[float] = None,
+                        compile_s: Optional[float] = None) -> None:
         """One completed request.  ``latency_s`` is the full experienced
-        latency (queue wait + compile + execute), measured by the loop."""
-        self._global.record(resp, latency_s)
-        self._series(resp.cache_key).record(resp, latency_s)
+        latency (queue wait + compile + execute), measured by the loop;
+        the optional phase terms feed the wait-vs-execute split and the
+        per-request breakdown behind :meth:`slowest`."""
+        self._global.record(resp, latency_s, queue_wait_s, execute_s)
+        self._series(resp.cache_key).record(resp, latency_s,
+                                            queue_wait_s, execute_s)
         self._key_names.setdefault(
             resp.cache_key, f"{resp.model_name}@{resp.graph_name}")
+        if queue_wait_s is not None or execute_s is not None:
+            self._phase_samples.append({
+                "request_id": getattr(resp, "request_id", None),
+                "latency_ms": round(latency_s * 1e3, 6),
+                "queue_wait_ms": round((queue_wait_s or 0.0) * 1e3, 6),
+                "execute_ms": round((execute_s or 0.0) * 1e3, 6),
+                "compile_ms": round((compile_s or 0.0) * 1e3, 6),
+            })
+
+    def slowest(self, n: int = 5) -> List[dict]:
+        """The ``n`` worst recorded requests WITH their phase breakdown
+        — how a p99 latency sample is traced to queue wait vs compile
+        vs execute (requires the loop to report phase terms)."""
+        return sorted(self._phase_samples,
+                      key=lambda s: s["latency_ms"],
+                      reverse=True)[:n]
 
     def record_batch(self, key: str, size: int) -> None:
         self._global.record_batch(size)
@@ -128,10 +177,15 @@ class Metrics:
     def set_active_version(self, vid: int) -> None:
         self.active_graph_version = vid
 
-    def record_cutover(self, from_vid: int, to_vid: int) -> None:
-        """One zero-downtime version swap completed."""
+    def record_cutover(self, from_vid: int, to_vid: int,
+                       pinned_old: int = 0) -> None:
+        """One zero-downtime version swap completed.  ``pinned_old`` is
+        the number of requests still pinned to ``from_vid`` at swap
+        time — the per-cutover version skew."""
         self.cutovers += 1
         self.active_graph_version = to_vid
+        self._cutover_log.append({"from": from_vid, "to": to_vid,
+                                  "pinned_old": int(pinned_old)})
 
     def record_version_request(self, vid: int) -> None:
         """One request served on graph version ``vid``."""
@@ -174,5 +228,9 @@ class Metrics:
                 "requests_per_version": {
                     f"v{k}": v for k, v in
                     sorted(self._version_requests.items())},
+                "cutover_log": list(self._cutover_log),
+                "max_version_skew": max(
+                    (c["pinned_old"] for c in self._cutover_log),
+                    default=0),
             }
         return out

@@ -32,6 +32,7 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.engine import InferenceRequest, InferenceResponse
+from repro.obs.tracer import get_tracer
 
 from .batcher import Batch, Batcher
 from .metrics import Metrics
@@ -64,6 +65,10 @@ class ServeLoop:
                                max_wait_us=max_wait_us, clock=clock)
         self._seq = 0
         self._admitted_at: Dict[int, float] = {}
+        # Wall-clock admission stamps for tracing only: the loop clock
+        # is injectable (tests drive fake clocks), so trace timestamps
+        # come from the tracer's perf_counter_ns clock instead.
+        self._admitted_ns: Dict[int, int] = {}
         self._results: Dict[int, InferenceResponse] = {}
         self._pins: Dict[int, tuple] = {}    # idx -> (live server, vid)
         self._lock = threading.Lock()
@@ -106,6 +111,12 @@ class ServeLoop:
         idx = self._seq
         self._seq += 1
         self._admitted_at[idx] = now
+        tracer = get_tracer()
+        if tracer.enabled:
+            self._admitted_ns[idx] = tracer.now_ns()
+            tracer.instant("admit", cat="serve", track="queue",
+                           args={"request": req.request_id or f"#{idx}",
+                                 "depth": self.batcher.depth})
         if pin is not None:
             with self._lock:
                 self._pins[idx] = pin
@@ -156,13 +167,31 @@ class ServeLoop:
         # covers batching delay AND time spent queued behind earlier
         # batches in this overlay's FIFO — the full experienced latency.
         started = self.clock()
+        tracer = get_tracer()
+        start_ns = tracer.now_ns() if tracer.enabled else 0
+        bspan = tracer.span(
+            "batch", cat="serve", track=f"overlay{overlay}",
+            args={"key": batch.key[:12], "size": len(batch)})
         resps = self.pool.execute_on(overlay, batch)
+        bspan.add(cache_hit=bool(resps and resps[0].cache_hit)).done()
         released = []
         with self._lock:
             for idx, r in zip(batch.indices, resps):
                 # experienced latency = queue wait + compile + execute
                 wait = started - self._admitted_at.pop(idx)
-                self.metrics.record_response(r, wait + r.t_loc + r.t_loh)
+                self.metrics.record_response(
+                    r, wait + r.t_loc + r.t_loh,
+                    queue_wait_s=wait, execute_s=r.t_loh,
+                    compile_s=r.t_loc)
+                adm_ns = self._admitted_ns.pop(idx, None)
+                if adm_ns is not None:
+                    # Retroactive: admission stamped in the caller's
+                    # thread, closed here in the worker at batch start.
+                    tracer.complete(
+                        "queue_wait", adm_ns, start_ns, cat="serve",
+                        track="queue",
+                        args={"request": r.request_id,
+                              "overlay": overlay})
                 self._results[idx] = r
                 pin = self._pins.pop(idx, None)
                 if pin is not None:

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.core.graph import Graph
 from repro.engine import InferenceRequest, InferenceResponse
+from repro.obs.tracer import get_tracer
 from repro.runtime import Batch, OverlayPool, ServeLoop, request_cost
 
 from .buckets import Bucket, bucket_for, layout_graph, template_graph
@@ -122,11 +123,17 @@ class SamplingService:
                 ) -> Tuple[InferenceRequest, EgoNet, Bucket]:
         """sample -> normalize -> bucket -> lay out; no execution.
         ``count=False`` keeps warmup traffic out of the bucket census."""
-        ego = sample_ego(self.graph, req.targets, req.fanouts,
-                         seed=req.seed)
-        sub = self._normalize(ego.graph)
-        bucket = bucket_for(sub, self.geometry)
-        gd = layout_graph(sub, bucket, self.geometry)
+        tracer = get_tracer()
+        with tracer.span("sample", cat="sample", track="sampling",
+                         args={"targets": len(req.targets)}) as sp:
+            ego = sample_ego(self.graph, req.targets, req.fanouts,
+                             seed=req.seed)
+            sub = self._normalize(ego.graph)
+            sp.add(n_vertices=sub.n_vertices, n_edges=sub.n_edges)
+        with tracer.span("layout", cat="sample", track="sampling") as sp:
+            bucket = bucket_for(sub, self.geometry)
+            gd = layout_graph(sub, bucket, self.geometry)
+            sp.add(bucket=bucket.key)
         feats = np.zeros((bucket.n_vertices, self.graph.feat_dim),
                          np.float32)
         feats[: ego.vertices.shape[0]] = self.features[ego.vertices]
