@@ -62,6 +62,9 @@ def parse_args(argv=None):
                     help="~1M-vertex point (minutes on CPU)")
     ap.add_argument("--out", default=os.path.join(ROOT,
                                                   "BENCH_fullgraph.json"))
+    ap.add_argument("--conformance-out",
+                    default=os.path.join(ROOT, "CONFORMANCE.md"),
+                    help="markdown ConformanceReport destination")
     ap.add_argument("--seed", type=int, default=0,
                     help="graph seed; recorded in provenance")
     ap.add_argument("--devices", type=int, default=1,
@@ -104,9 +107,16 @@ def make_local_powerlaw(nv: int, ne: int, n1: int, seed: int):
 def run_model(name: str, eng, g, x, reps: int, check_bits: bool,
               devices: int) -> dict:
     from repro.engine import ResidentBudgetError
+    from repro.obs import build_report, tracing
     ex = eng._executor
     eng.resident_budget_bytes = None
     prog = eng.compile(name, g, mesh=devices if devices > 1 else None)
+    if prog.source is None:
+        # program-cache hit returned a slim copy; conformance needs the
+        # object-graph Program behind the analytic cost model
+        prog = eng.compile(name, g,
+                           mesh=devices if devices > 1 else None,
+                           use_cache=False)
     dev_peak = ex.estimate_device_peak_bytes(prog, x.shape[1])
     rec: dict = {
         "model": name,
@@ -136,6 +146,16 @@ def run_model(name: str, eng, g, x, reps: int, check_bits: bool,
     need = window + ex._static_bytes
     rec["host_window_bytes"] = window
 
+    # Traced conformance pass (kernels now warm): per-layer measured
+    # wall time joined against the analytic cost model, staging
+    # bandwidth fitted from the stage spans, critical path from the
+    # span DAG.  This is the run the `model_error` gate prices.
+    with tracing() as tr:
+        y_conf = np.asarray(eng.run(prog, x, residency="host"))
+    assert np.array_equal(y, y_conf)
+    rep = build_report(prog, eng.exec_stats, residency="host",
+                       events=tr.events())
+
     if devices > 1:
         t0 = time.perf_counter()
         y_mesh = np.asarray(eng.run(prog, x, mesh=devices))
@@ -145,12 +165,49 @@ def run_model(name: str, eng, g, x, reps: int, check_bits: bool,
             "latency_s": round(mesh_s, 4),
             "bit_identical_to_host": bool(np.array_equal(y, y_mesh)),
             "halo_bytes": st.halo_bytes,
+            "halo_gather_bytes": st.halo_gather_bytes,
+            "halo_gap_bytes": max(0, st.halo_gather_bytes
+                                  - st.halo_bytes),
             "peak_device_bytes": st.peak_device_bytes,
             "per_device_tile_ops": [d["tile_ops"]
                                     for d in st.per_device],
             "per_device_blocks": [d["blocks"] for d in st.per_device],
             "tile_op_imbalance": round(st.device_imbalance, 4),
         }
+        # Fold the measured-vs-estimated halo gap of the mesh run into
+        # the conformance report (the host pass has no exchange).
+        # Signed: positive = the planner under-estimated the exchange,
+        # negative = the all_gather moved less than the estimate.
+        gap = int(st.halo_gather_bytes) - int(st.halo_bytes)
+        rep.halo = {
+            "estimated_bytes": int(st.halo_bytes),
+            "gathered_bytes": int(st.halo_gather_bytes),
+            "gap_bytes": gap,
+            "gap_fraction": gap / st.halo_bytes if st.halo_bytes else 0.0,
+        }
+
+    overall = rep.model_error_overall
+    overall_cal = rep.model_error_overall_calibrated
+    rec["conformance"] = {
+        "residency": rep.residency,
+        "predicted_s": round(rep.predicted_s, 6),
+        "measured_s": round(rep.measured_s, 6),
+        "model_error": {k: round(v, 4)
+                        for k, v in rep.model_error.items()},
+        "model_error_calibrated": {
+            k: round(v, 4)
+            for k, v in rep.model_error_calibrated.items()},
+        "model_error_overall": round(overall, 4),
+        "model_error_overall_calibrated": round(overall_cal, 4),
+        "calibration_gain": round(overall - overall_cal, 4),
+        "scales": {k: round(v, 4) for k, v in rep.scales.items()},
+        "calibrated_constants": {k: round(v, 1) for k, v
+                                 in rep.calibrated_constants.items()},
+        "halo": rep.halo,
+        "makespan_us": rep.critical_path["makespan_us"],
+        "critical_path_us": rep.critical_path["critical_path_us"],
+    }
+    rec["conformance_markdown"] = rep.to_markdown()
 
     if need >= dev_peak:
         # No gap (tiny graph / degenerate tiling): record and move on.
@@ -200,7 +257,8 @@ def run_model(name: str, eng, g, x, reps: int, check_bits: bool,
     return rec
 
 
-def main(mode: str, out_path: str, seed: int, devices: int) -> None:
+def main(mode: str, out_path: str, seed: int, devices: int,
+         conformance_out: str = None) -> None:
     import jax
     import jax.numpy as jnp
 
@@ -251,6 +309,17 @@ def main(mode: str, out_path: str, seed: int, devices: int) -> None:
         and r.get("host_under_budget", {}).get("completed", False)
         for r in results)
     report["only_partitioned_path_completes"] = only_streaming
+    # The per-model ConformanceReports ship as one markdown artifact
+    # (CONFORMANCE.md); the JSON keeps only the gated summary numbers.
+    sections = [f"# Cost-model conformance — fullgraph {mode}", ""]
+    for r in results:
+        md = r.pop("conformance_markdown", None)
+        if md:
+            sections += [f"# model {r['model']}", "", md, ""]
+    if conformance_out and len(sections) > 2:
+        with open(conformance_out, "w") as fp:
+            fp.write("\n".join(sections))
+        print(f"wrote {conformance_out}", flush=True)
     with open(out_path, "w") as fp:
         json.dump(report, fp, indent=1)
     print(f"wrote {out_path} (only_partitioned_path_completes="
@@ -261,4 +330,5 @@ if __name__ == "__main__":
     args = parse_args()
     force_device_count(args.devices)     # before any jax import
     mode = "smoke" if args.smoke else ("full" if args.full else "default")
-    main(mode, args.out, args.seed, args.devices)
+    main(mode, args.out, args.seed, args.devices,
+         conformance_out=args.conformance_out)

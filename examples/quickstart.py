@@ -23,6 +23,7 @@ from repro.core import graph as G  # noqa: E402
 from repro.core import reference as R  # noqa: E402
 from repro.core.perfmodel import predict_loh  # noqa: E402
 from repro.engine import Engine  # noqa: E402
+from repro.obs import build_report  # noqa: E402
 
 
 def main() -> None:
@@ -52,6 +53,15 @@ def main() -> None:
     err = float(jnp.max(jnp.abs(y - y_ref)))
     print(f"\noverlay output {y.shape}, max |err| vs reference: {err:.2e}")
     assert err < 1e-4
+
+    # Cost-model conformance: join the analytic per-layer predictions
+    # with the wall time the executor just measured for this run.
+    rep = build_report(prog, engine.exec_stats, residency="device")
+    print(f"T_LoH predicted {rep.predicted_s * 1e3:.3f} ms vs measured "
+          f"{rep.measured_s * 1e3:.3f} ms "
+          f"(model error {rep.model_error_overall:.2f} -> "
+          f"{rep.model_error_overall_calibrated:.2f} after calibrating "
+          f"effective machine constants)")
 
     # The overlay contract on disk: binary + weights/graph manifest.
     path = os.path.join(os.path.dirname(__file__), "gcn_cora.gagi")

@@ -30,6 +30,8 @@ class TilePlan:
     out_j: int = -1                      # output row-block / shard row
     tile_k: int = -1                     # edge-valued: source block
     slice_id: int = 0                    # edge-valued: ELL width slice
+    instr_lo: int = -1                   # first instruction index of block
+    instr_hi: int = -1                   # FLAG_LAST MEM_WR index (inclusive)
 
 
 @dataclasses.dataclass
@@ -44,6 +46,8 @@ class LayerPlan:
     act_enabled: bool
     on_edges: bool
     tiles: List[TilePlan]
+    instr_lo: int = -1                   # CSI instruction index
+    instr_hi: int = -1                   # last instruction index (inclusive)
 
 
 @dataclasses.dataclass
@@ -91,8 +95,9 @@ def decode_program(instrs: List[Instr]) -> ExecutionPlan:
     layers: List[LayerPlan] = []
     current: Optional[LayerPlan] = None
     pending: List[Instr] = []
+    pending_lo = -1                      # stream index of pending[0]
     expected: List[int] = []             # CSI-announced tiling block counts
-    for ins in instrs:
+    for idx, ins in enumerate(instrs):
         if ins.op == Opcode.HALT:
             break
         if ins.op == Opcode.CSI:
@@ -101,18 +106,26 @@ def decode_program(instrs: List[Instr]) -> ExecutionPlan:
                 layer_type=LayerType(ins.args[1]),
                 f_in=ins.args[2], f_out=ins.args[3],
                 mode=ins.act, act_enabled=ins.act_en,
-                on_edges=ins.on_edges, tiles=[])
+                on_edges=ins.on_edges, tiles=[],
+                instr_lo=idx, instr_hi=idx)
             layers.append(current)
             expected.append(ins.arg4)
             pending = []
+            pending_lo = -1
             continue
         if current is None:
             raise ValueError(
                 f"malformed program: {ins.op.name} before the first CSI")
+        if not pending:
+            pending_lo = idx
         pending.append(ins)
+        current.instr_hi = idx
         if ins.op == Opcode.MEM_WR and ins.flags & FLAG_LAST:
-            current.tiles.append(_close_tile(current, pending))
+            tp = _close_tile(current, pending)
+            tp.instr_lo, tp.instr_hi = pending_lo, idx
+            current.tiles.append(tp)
             pending = []
+            pending_lo = -1
     for lp, n in zip(layers, expected):
         if len(lp.tiles) != n:
             raise ValueError(

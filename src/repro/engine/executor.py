@@ -55,6 +55,7 @@ with a leading batch axis and vmapped together with the features, so N
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -125,8 +126,22 @@ class ExecStats:
     # Multi-device placement telemetry (mesh mode).
     n_devices: int = 1              # mesh size of the last run
     halo_bytes: int = 0             # compile-time halo exchange volume
+    halo_gather_bytes: int = 0      # MEASURED all_gather volume (mesh)
     peak_device_bytes: int = 0      # est. per-device resident peak
     per_device: Optional[List[dict]] = None  # {"device","tile_ops",...}
+    # Per-decoded-layer attribution, populated on every residency path:
+    # {"layer","kernel","step","instr_lo","instr_hi","wall_s","tile_ops",
+    #  + path extras ("h2d_bytes" host, "halo_gather_bytes" mesh)}.
+    per_layer: Optional[List[dict]] = None
+
+    # record keys that identify a layer rather than accumulate
+    _LAYER_IDENTITY = ("layer", "kernel", "step", "type",
+                      "instr_lo", "instr_hi")
+
+    def note_layer(self, **rec) -> None:
+        if self.per_layer is None:
+            self.per_layer = []
+        self.per_layer.append(rec)
 
     def add(self, other: "ExecStats") -> None:
         self.tile_ops += other.tile_ops
@@ -135,6 +150,28 @@ class ExecStats:
         self.shards_streamed += other.shards_streamed
         self.h2d_bytes += other.h2d_bytes
         self.halo_bytes += other.halo_bytes
+        self.halo_gather_bytes += other.halo_gather_bytes
+        if other.per_layer is not None:
+            # MERGE per-layer attribution (keyed by decoded layer id +
+            # kernel mode) so lifetime totals accumulate wall time and
+            # tile ops per layer across runs, mirroring per_device.
+            if self.per_layer is None:
+                self.per_layer = [dict(r) for r in other.per_layer]
+            else:
+                by_key = {(r.get("layer"), r.get("kernel")): r
+                          for r in self.per_layer}
+                for orr in other.per_layer:
+                    mine = by_key.get((orr.get("layer"),
+                                       orr.get("kernel")))
+                    if mine is None:
+                        self.per_layer.append(dict(orr))
+                        continue
+                    for k, v in orr.items():
+                        if k in self._LAYER_IDENTITY:
+                            mine[k] = v
+                        else:
+                            mine[k] = mine.get(k, 0) + v
+                self.per_layer.sort(key=lambda r: r.get("step", 0))
         self.n_devices = max(self.n_devices, other.n_devices)
         self.peak_live_outputs = max(self.peak_live_outputs,
                                      other.peak_live_outputs)
@@ -943,11 +980,14 @@ class BinaryExecutor:
             h_in = (vals.get(feat_parents[0], x_pad) if feat_parents
                     else x_pad)
             lt = lp.layer_type
+            t_wall0 = time.perf_counter()
+            ops0 = self.stats.tile_ops
             lspan = tracer.span(
                 f"layer{lp.layer_id}", cat="exec", track="exec:device",
                 args={"type": LayerType(lt).name,
                       "kernel": _KERNEL_MODES[lt], "step": t,
-                      "tiles": len(lp.tiles)})
+                      "tiles": len(lp.tiles),
+                      "instr_lo": lp.instr_lo, "instr_hi": lp.instr_hi})
 
             if lt in (LayerType.ACTIVATION, LayerType.BATCHNORM) \
                     and lp.on_edges:
@@ -987,7 +1027,12 @@ class BinaryExecutor:
                             jax.block_until_ready(v)
                     vals[lp.layer_id] = self._assemble(
                         out_tiles, nb, kern.out_width(io) // n2)
-            lspan.add(tile_ops=self.stats.tile_ops).done()
+            lspan.add(tile_ops=self.stats.tile_ops - ops0).done()
+            self.stats.note_layer(
+                layer=int(lp.layer_id), kernel=_KERNEL_MODES[lt],
+                step=t, instr_lo=lp.instr_lo, instr_hi=lp.instr_hi,
+                wall_s=time.perf_counter() - t_wall0,
+                tile_ops=self.stats.tile_ops - ops0)
             self._watermark("alloc", lp.layer_id, vals, edge_vals)
             # Interval liveness: drop outputs whose last consumer just
             # ran, so peak memory follows the live-set, not model depth.
@@ -1096,16 +1141,20 @@ class BinaryExecutor:
     # kernels on the same values in the same order as the
     # device-resident path, so results are bit-identical.
     # ------------------------------------------------------------------ #
-    def _stage(self, arrs: Dict[str, np.ndarray]):
-        """Ship one working set host -> device; returns (staged, bytes)."""
-        with get_tracer().span("stage", cat="h2d", track="h2d") as sp:
+    def _stage(self, arrs: Dict[str, np.ndarray], **span_args):
+        """Ship one working set host -> device; returns (staged, bytes).
+        ``span_args`` (e.g. ``shard=j``, ``layer=lid``) land on the stage
+        span so trace analysis can join stage -> compute per shard."""
+        with get_tracer().span("stage", cat="h2d", track="h2d",
+                               args=span_args or None) as sp:
             staged = {k: jax.device_put(a) for k, a in arrs.items()}
             nbytes = sum(_nbytes(a) for a in arrs.values())
             sp.add(bytes=nbytes, arrays=len(arrs))
         self.stats.h2d_bytes += nbytes
         return staged, nbytes
 
-    def _stream_shards(self, order, build, compute) -> None:
+    def _stream_shards(self, order, build, compute, layer: int = -1
+                       ) -> None:
         """Drive one layer's destination shards through the double
         buffer: stage shard ``order[0]``, then for each shard dispatch
         its tile ops (async), stage the NEXT shard's working set while
@@ -1116,7 +1165,8 @@ class BinaryExecutor:
         if not order:
             return
         tracer = get_tracer()
-        staged_next, next_bytes = self._stage(build(order[0]))
+        staged_next, next_bytes = self._stage(
+            build(order[0]), shard=int(order[0]), layer=layer)
         for idx, j in enumerate(order):
             staged, cur_bytes = staged_next, next_bytes
             # The compute span covers dispatch THROUGH write-back; the
@@ -1124,11 +1174,13 @@ class BinaryExecutor:
             # the trace shows the double-buffer overlap directly (the
             # acceptance property: stage and compute spans intersect).
             cspan = tracer.span("compute", cat="exec", track="exec:host",
-                                args={"shard": int(j),
+                                args={"shard": int(j), "layer": layer,
                                       "staged_bytes": cur_bytes})
             pending = compute(j, staged)
             if idx + 1 < len(order):
-                staged_next, next_bytes = self._stage(build(order[idx + 1]))
+                staged_next, next_bytes = self._stage(
+                    build(order[idx + 1]), shard=int(order[idx + 1]),
+                    layer=layer)
             else:
                 staged_next, next_bytes = None, 0
             window = cur_bytes + next_bytes
@@ -1200,11 +1252,15 @@ class BinaryExecutor:
             ewl = meta.get("edge_weight_layer")
             feat_parents = [p for p in meta["parents"] if p != ewl]
             lt = lp.layer_type
+            t_wall0 = time.perf_counter()
+            ops0 = self.stats.tile_ops
+            h2d0 = self.stats.h2d_bytes
             lspan = tracer.span(
                 f"layer{lp.layer_id}", cat="exec", track="exec:host",
                 args={"type": LayerType(lt).name,
                       "kernel": _KERNEL_MODES[lt], "step": t,
-                      "tiles": len(lp.tiles), "lanes": L})
+                      "tiles": len(lp.tiles), "lanes": L,
+                      "instr_lo": lp.instr_lo, "instr_hi": lp.instr_hi})
 
             if lt in (LayerType.ACTIVATION, LayerType.BATCHNORM) \
                     and lp.on_edges:
@@ -1256,15 +1312,22 @@ class BinaryExecutor:
                                             kern.tile(tp, env)))
                     return pending
 
-                self._stream_shards(order, build, compute)
+                self._stream_shards(order, build, compute,
+                                    layer=int(lp.layer_id))
                 for ln in range(L):
                     if kern.edge_valued:
                         edge_vals[ln][lp.layer_id] = \
                             outs[ln][: pg.n_edges]
                     else:
                         vals[ln][lp.layer_id] = outs[ln]
-            lspan.add(tile_ops=self.stats.tile_ops,
-                      h2d_bytes=self.stats.h2d_bytes).done()
+            lspan.add(tile_ops=self.stats.tile_ops - ops0,
+                      h2d_bytes=self.stats.h2d_bytes - h2d0).done()
+            self.stats.note_layer(
+                layer=int(lp.layer_id), kernel=_KERNEL_MODES[lt],
+                step=t, instr_lo=lp.instr_lo, instr_hi=lp.instr_hi,
+                wall_s=time.perf_counter() - t_wall0,
+                tile_ops=self.stats.tile_ops - ops0,
+                h2d_bytes=self.stats.h2d_bytes - h2d0)
             self._watermark("alloc", lp.layer_id, vals[0], edge_vals[0])
             # Liveness hooks observe lane 0 only (one event per value,
             # as in a single run); every lane still frees its outputs.
@@ -1375,10 +1438,14 @@ class BinaryExecutor:
     # single-device executor — the same property the host-streaming
     # path relies on.
     # ------------------------------------------------------------------ #
-    def _mesh_exchange(self, slabs, mesh, axis, devs, width: int):
+    def _mesh_exchange(self, slabs, mesh, axis, devs, width: int,
+                       layer: int = -1, est_bytes: int = 0):
         """Halo exchange: per-device slabs -> a gathered ``[D, B*n1, f]``
         view committed to every device, via a ``shard_map`` all_gather
-        over the mesh axis."""
+        over the mesh axis.  The span carries both the MEASURED gather
+        volume (``bytes``) and the compile-time targeted-halo estimate
+        (``est_bytes``) so conformance can quantify the gap a
+        ppermute-style targeted exchange would close."""
         from jax.sharding import NamedSharding
         from jax.sharding import PartitionSpec as P
 
@@ -1388,7 +1455,8 @@ class BinaryExecutor:
         rows = int(slabs[0].shape[0])
         with get_tracer().span(
                 "halo_exchange", cat="comm", track="halo",
-                args={"devices": D, "bytes": D * rows * width * 4}):
+                args={"devices": D, "bytes": D * rows * width * 4,
+                      "layer": layer, "est_bytes": est_bytes}):
             global_x = jax.make_array_from_single_device_arrays(
                 (D * rows, width), NamedSharding(mesh, P(axis)),
                 list(slabs))
@@ -1460,6 +1528,8 @@ class BinaryExecutor:
             lt = lp.layer_type
             pll = pl["layers"][str(lp.layer_id)]
             gath_bytes = 0
+            t_wall0 = time.perf_counter()
+            ops0 = self.stats.tile_ops
 
             if lt in (LayerType.ACTIVATION, LayerType.BATCHNORM) \
                     and lp.on_edges:
@@ -1479,9 +1549,13 @@ class BinaryExecutor:
                 gathered = None
                 if gather:
                     width = int(parents[0].shape[1])
-                    gathered = self._mesh_exchange(parents, mesh, axis,
-                                                   devs, width)
+                    est = sum(pll["halo_bytes"].get(str(d), 0)
+                              for d in range(D))
+                    gathered = self._mesh_exchange(
+                        parents, mesh, axis, devs, width,
+                        layer=int(lp.layer_id), est_bytes=est)
                     gath_bytes = D * B * n1 * width * 4
+                    self.stats.halo_gather_bytes += gath_bytes
                     for d in range(D):
                         per_dev[d]["halo_bytes"] += \
                             pll["halo_bytes"].get(str(d), 0)
@@ -1503,7 +1577,9 @@ class BinaryExecutor:
                         f"layer{lp.layer_id}", cat="exec",
                         track=f"exec:dev{d}",
                         args={"type": LayerType(lt).name,
-                              "kernel": _KERNEL_MODES[lt], "step": t})
+                              "kernel": _KERNEL_MODES[lt], "step": t,
+                              "instr_lo": lp.instr_lo,
+                              "instr_hi": lp.instr_hi})
                     env = _MeshEnv(
                         pg, place,
                         gathered=gathered[d] if gather else None,
@@ -1563,6 +1639,12 @@ class BinaryExecutor:
                     vals[lp.layer_id] = outs
                 if not self.overlap:
                     jax.block_until_ready(outs)
+            self.stats.note_layer(
+                layer=int(lp.layer_id), kernel=_KERNEL_MODES[lt],
+                step=t, instr_lo=lp.instr_lo, instr_hi=lp.instr_hi,
+                wall_s=time.perf_counter() - t_wall0,
+                tile_ops=self.stats.tile_ops - ops0,
+                halo_gather_bytes=gath_bytes)
             live = sum(_nbytes_any(a) for dd in (vals, edge_vals)
                        for a in dd.values())
             peak_dev = max(peak_dev, live // D + gath_bytes)

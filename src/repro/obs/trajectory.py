@@ -318,5 +318,25 @@ DEFAULT_SPECS: Dict[str, List[MetricSpec]] = {
         MetricSpec("models.0.host_under_budget.h2d_bytes",
                    "lower", 0.1,
                    note="deterministic staging traffic"),
+        # Cost-model conformance (repro.obs.conformance): normalized
+        # RMSE of predicted vs measured per-layer time, per kernel
+        # mode.  Bands are asymmetric and generous — wall time on CI
+        # hosts is noisy — but a model that drifts to ~3x its committed
+        # error has genuinely decoupled from the executor and fails.
+        MetricSpec("models.0.conformance.model_error.gemm",
+                   "lower", 2.0, 0.5,
+                   note="cost-model drift, GEMM mode"),
+        MetricSpec("models.0.conformance.model_error.spdmm",
+                   "lower", 2.0, 0.5,
+                   note="cost-model drift, SpDMM mode"),
+        MetricSpec("models.0.conformance.model_error_overall",
+                   "lower", 2.0, 0.5,
+                   note="cost-model drift, all modes"),
+        # rel 1.0: the gain's magnitude tracks run noise, only its SIGN
+        # is the invariant — fail when calibration stops reducing the
+        # error (fresh < baseline·0 - 0.05, i.e. gain goes negative)
+        MetricSpec("models.0.conformance.calibration_gain",
+                   "higher", 1.0, 0.05,
+                   note="LS calibration must keep reducing model error"),
     ],
 }
