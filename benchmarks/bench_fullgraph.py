@@ -263,9 +263,9 @@ def main(mode: str, out_path: str, seed: int, devices: int,
     import jax.numpy as jnp
 
     try:                        # script: python benchmarks/bench_fullgraph.py
-        from common import provenance
+        from common import provenance, verify_section
     except ImportError:         # module: python -m benchmarks.bench_fullgraph
-        from benchmarks.common import provenance
+        from benchmarks.common import provenance, verify_section
 
     from repro.core import graph as G
     from repro.core.passes.partition import PartitionConfig
@@ -309,6 +309,9 @@ def main(mode: str, out_path: str, seed: int, devices: int,
         and r.get("host_under_budget", {}).get("completed", False)
         for r in results)
     report["only_partitioned_path_completes"] = only_streaming
+    # Static verification of every benched program (cache hits off the
+    # warm engine — no recompiles) — semantic trajectory metrics.
+    report["verify"] = verify_section(eng, [(m, g) for m in MODELS])
     # The per-model ConformanceReports ship as one markdown artifact
     # (CONFORMANCE.md); the JSON keeps only the gated summary numbers.
     sections = [f"# Cost-model conformance — fullgraph {mode}", ""]

@@ -31,9 +31,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np  # noqa: E402
 
 try:                                    # script: python benchmarks/bench_live.py
-    from common import provenance
+    from common import provenance, verify_section
 except ImportError:                     # module: python -m benchmarks.bench_live
-    from benchmarks.common import provenance
+    from benchmarks.common import provenance, verify_section
 
 from repro.core import graph as G  # noqa: E402
 from repro.core.passes.partition import PartitionConfig  # noqa: E402
@@ -216,6 +216,12 @@ def run(smoke: bool, out_path: str, seed: int = 0) -> dict:
     c = report["cutover"]
     print(f"cutover,{c['requests']} reqs,{c['throughput_rps']} rps,"
           f"dropped={c['dropped']},misrouted={c['misrouted']}")
+    # Static verification of the live-handle program (the rebind path's
+    # capacity-checked kernel legality) — semantic trajectory metrics.
+    live = LiveGraphServer(GraphVersionStore(make_graph(smoke, seed),
+                                             geometry=geom))
+    report["verify"] = verify_section(
+        Engine(geometry=geom, n_pes=n_pes), [(model, live)])
     with open(out_path, "w") as f:
         json.dump(report, f, indent=1)
     print(f"wrote {out_path}")

@@ -33,14 +33,13 @@ from typing import List
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 try:                                   # script: python benchmarks/bench_sample.py
-    from common import provenance
+    from common import provenance, verify_section
 except ImportError:                    # module: python -m benchmarks.bench_sample
-    from benchmarks.common import provenance
+    from benchmarks.common import provenance, verify_section
 
 from repro.core import graph as G  # noqa: E402
 from repro.core.passes.partition import PartitionConfig  # noqa: E402
@@ -173,6 +172,9 @@ def run(smoke: bool, n_requests: int, n_overlays: int, max_batch: int,
         print(f"{path},{r['wall_s']},{r['throughput_rps']},"
               f"{r['p50_ms']},{r['p99_ms']},{r['cache_hit_rate']}")
     print(f"speedup,{speedup:.3f}x,,,,")
+    # Static verification of the served model against the parent graph.
+    report["verify"] = verify_section(
+        Engine(geometry=geom, n_pes=n_pes), [("b1", g.gcn_normalized())])
     with open(out_path, "w") as f:
         json.dump(report, f, indent=1)
     print(f"wrote {out_path}")

@@ -32,9 +32,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax.numpy as jnp  # noqa: E402
 
 try:                                    # script: python benchmarks/bench_serve.py
-    from common import provenance
+    from common import provenance, verify_section
 except ImportError:                     # module: python -m benchmarks.bench_serve
-    from benchmarks.common import provenance
+    from benchmarks.common import provenance, verify_section
 
 from repro.core import graph as G  # noqa: E402
 from repro.core.passes.partition import PartitionConfig  # noqa: E402
@@ -148,6 +148,11 @@ def run(smoke: bool, n_requests: int, n_overlays: int, max_batch: int,
             print(f"{shape},{path},{r['wall_s']},{r['throughput_rps']},"
                   f"{r['p50_ms']},{r['p99_ms']}")
         print(f"{shape},speedup,{speedup:.3f}x,,,")
+    # Static verification of every (model, graph) program the mixed
+    # traffic exercises — semantic trajectory metrics, not wall time.
+    report["verify"] = verify_section(
+        Engine(geometry=geom, n_pes=n_pes),
+        [("b1", ga), ("b6", gb), ("b7", ga), ("b3", gb)])
     with open(out_path, "w") as f:
         json.dump(report, f, indent=1)
     print(f"wrote {out_path}")

@@ -44,7 +44,7 @@ def main(argv=None) -> int:
             f.write(md + "\n")
     if not report.ok:
         print(f"trajectory gate FAILED: {len(report.regressions)} "
-              f"metric(s) regressed", file=sys.stderr)
+              "metric(s) regressed", file=sys.stderr)
         return 1
     return 0
 

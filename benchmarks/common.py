@@ -77,6 +77,38 @@ def run_model(bname: str, g: "G.Graph", x, engine: Engine,
     return prog.t_loc, t_loh, t_comm, prog, t_pred
 
 
+def verify_section(engine: Engine,
+                   pairs: List[Tuple[str, "G.Graph"]]) -> Dict[str, object]:
+    """Statically verify compiled programs and return the report's
+    ``verify`` block.
+
+    ``checks_passed``/``checks_failed`` are summed over programs and
+    gated by the trajectory specs at zero width: the passed count may
+    only grow (new checks, new programs) and the failed count must stay
+    at zero — a verifier regression is a semantic break, not noise.
+    """
+    from repro.verify import verify_program
+    programs: List[Dict[str, object]] = []
+    passed = failed = 0
+    for m, g in pairs:
+        prog = engine.compile(m, g, verify=False)
+        rep = verify_program(prog)
+        programs.append({
+            "program": rep.program,
+            "ok": rep.ok,
+            "checks_passed": len(rep.checks_passed),
+            "checks_failed": rep.checks_failed,
+        })
+        passed += len(rep.checks_passed)
+        failed += len(rep.checks_failed)
+    return {
+        "programs": programs,
+        "checks_passed": passed,
+        "checks_failed": failed,
+        "ok": failed == 0,
+    }
+
+
 def emit(rows: List[str]) -> None:
     for r in rows:
         print(r, flush=True)

@@ -32,5 +32,5 @@ def run(quick: bool = False) -> None:
               f"dominant={rf['dominant']};compute_s={rf['compute_s']:.4f};"
               f"memory_s={rf['memory_s']:.4f};"
               f"collective_s={rf['collective_s']:.4f};"
-              f"mem_per_dev_GiB="
+              "mem_per_dev_GiB="
               f"{r['memory']['per_device_total'] / 2 ** 30:.1f}"])

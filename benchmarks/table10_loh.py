@@ -7,7 +7,6 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import gnn_builders as B
 from repro.core import reference as R

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import functools
 import threading
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

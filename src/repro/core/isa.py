@@ -113,7 +113,7 @@ class Instr:
                 raise ValueError(
                     f"{self.op.name}: field {name}={val} exceeds its "
                     f"encoding range [0, {hi}] — model/graph too large "
-                    f"for the 128-bit instruction format")
+                    "for the 128-bit instruction format")
         w0 = ((int(self.op) & 0xFF)
               | (self.pe & 0xFF) << 8
               | (self.act & 0x3F) << 16
@@ -129,8 +129,15 @@ class Instr:
     @staticmethod
     def decode(words: np.ndarray) -> "Instr":
         w0, w1, w2, w3 = (int(w) for w in words)
+        opcode = w0 & 0xFF
+        try:
+            op = Opcode(opcode)
+        except ValueError:
+            raise ValueError(
+                f"unknown opcode {opcode} (word0=0x{w0:08X}); valid "
+                f"opcodes are 0..{max(Opcode)}") from None
         return Instr(
-            op=Opcode(w0 & 0xFF),
+            op=op,
             pe=(w0 >> 8) & 0xFF,
             act=(w0 >> 16) & 0x3F,
             act_en=bool(w0 >> 22 & 1),
@@ -159,9 +166,12 @@ def assemble(instrs: List[Instr]) -> bytes:
 def disassemble(blob: bytes) -> List[Instr]:
     """Decode a binary produced by :func:`assemble`.
 
-    Raises ``ValueError`` (never a bare assert / numpy reshape crash) on a
-    wrong magic, an incompatible format version, or a body shorter than
-    the instruction count announced in the header.
+    Raises ``ValueError`` (never a bare assert / struct.error / numpy
+    reshape crash) on a wrong magic, an incompatible format version, a
+    payload that disagrees with the header's instruction count in
+    EITHER direction (truncation or trailing bytes), a body that is not
+    a whole number of 16-byte instructions, or an out-of-range opcode —
+    each error names the byte offset / instruction index at fault.
     """
     if len(blob) < HEADER_BYTES:
         raise ValueError(
@@ -170,18 +180,32 @@ def disassemble(blob: bytes) -> List[Instr]:
     magic, version, n, _ = struct.unpack_from("<IIII", blob, 0)
     if magic != MAGIC:
         raise ValueError(
-            f"bad magic 0x{magic:08X}: not a GraphAGILE binary "
-            f"(expected 0x{MAGIC:08X} 'GAGI')")
+            f"bad magic 0x{magic:08X} at offset 0: not a GraphAGILE "
+            f"binary (expected 0x{MAGIC:08X} 'GAGI')")
     if version != VERSION:
         raise ValueError(
-            f"unsupported GraphAGILE binary version {version} "
-            f"(this runtime decodes version {VERSION})")
+            f"unsupported GraphAGILE binary version {version} at "
+            f"offset 4 (this runtime decodes version {VERSION})")
     expected = HEADER_BYTES + n * INSTR_BYTES
     if len(blob) < expected:
         raise ValueError(
             f"truncated GraphAGILE binary: header announces {n} "
             f"instructions ({expected} bytes) but only {len(blob)} "
-            f"bytes are present")
+            "bytes are present")
+    if len(blob) > expected:
+        raise ValueError(
+            f"oversized GraphAGILE binary: header announces {n} "
+            f"instructions ({expected} bytes) but {len(blob)} bytes are "
+            f"present — {len(blob) - expected} trailing byte(s) at "
+            f"offset {expected}")
     words = np.frombuffer(blob, dtype="<u4", offset=HEADER_BYTES,
                           count=n * 4).reshape(n, 4)
-    return [Instr.decode(w) for w in words]
+    out: List[Instr] = []
+    for idx, w in enumerate(words):
+        try:
+            out.append(Instr.decode(w))
+        except ValueError as e:
+            raise ValueError(
+                f"instruction {idx} (byte offset "
+                f"{HEADER_BYTES + idx * INSTR_BYTES}): {e}") from None
+    return out

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 from ..ir import Activation, LayerIR, LayerType, ModelIR
 from ..isa import (FLAG_ACC, FLAG_LAST, FLAG_LOCK, FLAG_UNLOCK, Buf, Instr,

@@ -7,7 +7,7 @@ int32 [B, T] per step.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

@@ -13,7 +13,6 @@ sequential execution.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax

@@ -59,13 +59,14 @@ class ExecutionPlan:
         return len(self.layers)
 
 
-def _close_tile(layer: LayerPlan, instrs: List[Instr]) -> TilePlan:
+def _close_tile(layer: LayerPlan, instrs: List[Instr],
+                base: int = -1) -> TilePlan:
     lt = layer.layer_type
     standalone_act = lt in (LayerType.ACTIVATION, LayerType.BATCHNORM)
     compute: List[Instr] = []
     epilogue: List[Tuple[str, int]] = []
     tp = TilePlan(pe=0, compute=compute, epilogue=epilogue)
-    for ins in instrs:
+    for off, ins in enumerate(instrs):
         if ins.op in _COMPUTE_OPS:
             compute.append(ins)
         elif ins.op in (Opcode.ACT, Opcode.AFFINE):
@@ -77,7 +78,14 @@ def _close_tile(layer: LayerPlan, instrs: List[Instr]) -> TilePlan:
                 epilogue.append(("act", ins.act))
         elif ins.op == Opcode.MEM_WR:
             tp.pe = ins.pe
-            region = Region(ins.args[1])
+            try:
+                region = Region(ins.args[1])
+            except ValueError:
+                where = base + off if base >= 0 else off
+                raise ValueError(
+                    f"malformed program: instruction {where} MEM_WR "
+                    f"names unknown region {ins.args[1]} (valid: "
+                    f"0..{max(Region)})") from None
             if region == Region.OUT_SUBFIBER:
                 tp.out_i, tp.out_j = ins.args[2], ins.args[3]
             else:                                   # OUT_EDGE: (j, k)
@@ -101,9 +109,16 @@ def decode_program(instrs: List[Instr]) -> ExecutionPlan:
         if ins.op == Opcode.HALT:
             break
         if ins.op == Opcode.CSI:
+            try:
+                layer_type = LayerType(ins.args[1])
+            except ValueError:
+                raise ValueError(
+                    f"malformed program: instruction {idx} CSI "
+                    f"announces unknown layer type {ins.args[1]} "
+                    f"(valid: 0..{max(LayerType)})") from None
             current = LayerPlan(
                 layer_id=ins.args[0],
-                layer_type=LayerType(ins.args[1]),
+                layer_type=layer_type,
                 f_in=ins.args[2], f_out=ins.args[3],
                 mode=ins.act, act_enabled=ins.act_en,
                 on_edges=ins.on_edges, tiles=[],
@@ -121,7 +136,7 @@ def decode_program(instrs: List[Instr]) -> ExecutionPlan:
         pending.append(ins)
         current.instr_hi = idx
         if ins.op == Opcode.MEM_WR and ins.flags & FLAG_LAST:
-            tp = _close_tile(current, pending)
+            tp = _close_tile(current, pending, base=pending_lo)
             tp.instr_lo, tp.instr_hi = pending_lo, idx
             current.tiles.append(tp)
             pending = []

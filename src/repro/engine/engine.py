@@ -29,6 +29,8 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import os
+import re
 import time
 import warnings
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Union
@@ -49,6 +51,26 @@ from .executor import BinaryExecutor, ExecStats, ensure_placement
 from .program import CompiledProgram, from_program
 
 ModelSpec = Union[str, ModelIR]
+
+
+def _env_verify_default() -> bool:
+    """Process default for ``Engine(verify=...)``: the ``REPRO_VERIFY``
+    env var (tests/CI export 1; hot serving paths leave it unset)."""
+    return os.environ.get("REPRO_VERIFY", "0").lower() in (
+        "1", "true", "yes", "on")
+
+
+def _export_gagi(prog: CompiledProgram) -> None:
+    """``GAGI_EXPORT_DIR``: drop every freshly compiled program as a
+    ``.gagi`` bundle there (how CI collects the verify-gate corpus)."""
+    out = os.environ.get("GAGI_EXPORT_DIR")
+    if not out:
+        return
+    os.makedirs(out, exist_ok=True)
+    stem = re.sub(r"[^A-Za-z0-9_.-]+", "_",
+                  f"{prog.model_name}-{prog.graph_name}")
+    prog.save(os.path.join(
+        out, f"{stem}-{prog.cache_key[:8] or 'nokey'}.gagi"))
 
 
 def _mesh_count(mesh) -> Optional[int]:
@@ -258,10 +280,15 @@ class Engine:
                  overlap: bool = True, interpret: bool = True,
                  vmem_budget_bytes: int = 3 << 20,
                  cache_capacity: int = 32,
-                 resident_budget_bytes: Optional[int] = None) -> None:
+                 resident_budget_bytes: Optional[int] = None,
+                 verify: Optional[bool] = None) -> None:
         self.geometry = geometry
         self.n_pes = n_pes
         self.backend = backend
+        # Static verification of every fresh compile / livegraph rebind
+        # (repro.verify).  None -> the REPRO_VERIFY env var; tests/CI
+        # set it, hot serving paths keep it off.
+        self.verify = _env_verify_default() if verify is None else verify
         self.vmem_budget_bytes = vmem_budget_bytes
         self._executor = BinaryExecutor(
             backend=backend, overlap=overlap, interpret=interpret,
@@ -310,7 +337,8 @@ class Engine:
     def compile(self, model: ModelSpec, graph: Graph, *, seed: int = 0,
                 order_opt: bool = True, fusion: bool = True,
                 use_cache: bool = True, residency: Optional[str] = None,
-                mesh=None, _key: Optional[str] = None) -> CompiledProgram:
+                mesh=None, verify: Optional[bool] = None,
+                _key: Optional[str] = None) -> CompiledProgram:
         """Model + graph -> CompiledProgram (through the §6 pipeline).
 
         ``model`` is a benchmark name ("b1".."b8", built with ``seed``) or
@@ -336,10 +364,18 @@ class Engine:
         *structural* signature, so a content-only delta hits the cache;
         the returned program is then *rebound* to the version's patched
         tiles (``GraphVersion.bind``) — fresh tiles, zero recompiles.
+
+        ``verify`` statically verifies the program (``repro.verify``:
+        hazard/coverage/legality/budget checks, no execution) on every
+        fresh compile and every livegraph rebind, raising
+        :class:`repro.verify.VerifyError` on a failing report.  None
+        defers to ``Engine(verify=...)`` / the ``REPRO_VERIFY`` env var;
+        plain cache hits are never re-verified.
         """
         if residency not in (None, "device", "host"):
-            raise ValueError(f"residency must be 'device' or 'host', "
+            raise ValueError("residency must be 'device' or 'host', "
                              f"got {residency!r}")
+        do_verify = self.verify if verify is None else verify
         n_devices = _mesh_count(mesh)
         lv = _live_version_of(graph)
         if lv is not None:
@@ -356,6 +392,8 @@ class Engine:
                     ensure_placement(cached, n_devices)
                 if lv is not None:
                     cached = lv.bind(cached)
+                    if do_verify:
+                        self._verify_program(cached)
                 if residency is not None:
                     return dataclasses.replace(
                         cached, default_residency=residency)
@@ -393,7 +431,20 @@ class Engine:
             # with version + tile stats); keep this caller's reports.
             prog = dataclasses.replace(lv.bind(prog), source=prog.source,
                                        default_residency=residency)
+        if do_verify:
+            self._verify_program(prog)
+        _export_gagi(prog)
         return prog
+
+    def _verify_program(self, prog: CompiledProgram) -> None:
+        from repro.verify import VerifyError, verify_program
+        tracer = get_tracer()
+        with tracer.span("verify", cat="compile", track="compile",
+                         args={"key": prog.cache_key[:12]}) as sp:
+            report = verify_program(prog)
+            sp.add(ok=report.ok, violations=len(report.violations))
+        if not report.ok:
+            raise VerifyError(report)
 
     def run(self, prog: CompiledProgram, x,
             weights: Optional[Dict[str, np.ndarray]] = None,
@@ -464,7 +515,7 @@ class Engine:
                     f"{path} was compiled for tile geometry "
                     f"(n1, n2, width_cap)={theirs} but this engine is "
                     f"fixed at {mine}; new tile kernels will be "
-                    f"compiled", stacklevel=2)
+                    "compiled", stacklevel=2)
         return prog
 
     # ------------------------------------------------------------------ #
@@ -547,7 +598,7 @@ class Engine:
             k = self.cache_key(r.model, r.graph, seed=r.seed)
             if k != key:
                 raise ValueError(
-                    f"submit_batch requires one cache key per batch: "
+                    "submit_batch requires one cache key per batch: "
                     f"request {r.request_id!r} has key {k[:12]}… but the "
                     f"batch was opened with {key[:12]}…")
         # Live versions share the structural cache key by design, but a

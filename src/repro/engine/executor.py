@@ -809,7 +809,7 @@ class BinaryExecutor:
             f"(liveness-aware peak{batch_note}) but "
             f"resident_budget_bytes={budget} ({est - budget} bytes over)"
             f"{detail}; re-run with residency='host' to stream "
-            f"shard-by-shard" + (" or shrink the batch" if batch > 1
+            "shard-by-shard" + (" or shrink the batch" if batch > 1
                                  else ""))
 
     # ------------------------------------------------------------------ #
@@ -918,7 +918,7 @@ class BinaryExecutor:
             graph_data: Optional[dict] = None,
             residency: str = "device", mesh=None) -> jnp.ndarray:
         if residency not in ("device", "host"):
-            raise ValueError(f"residency must be 'device' or 'host', "
+            raise ValueError("residency must be 'device' or 'host', "
                              f"got {residency!r}")
         if mesh is not None:
             if graph_data is not None:
@@ -1067,7 +1067,7 @@ class BinaryExecutor:
         """
         if xs.ndim != 3:
             raise ValueError(
-                f"run_batch expects stacked [N, V, F] features, got "
+                "run_batch expects stacked [N, V, F] features, got "
                 f"shape {tuple(xs.shape)}")
         if mesh is not None:
             if graph_data is not None:
@@ -1193,10 +1193,10 @@ class BinaryExecutor:
                 raise ResidentBudgetError(
                     f"shard working set ({window} bytes double-buffered "
                     f"+ {self._static_bytes} resident weights) exceeds "
-                    f"resident_budget_bytes="
+                    "resident_budget_bytes="
                     f"{self.resident_budget_bytes}; recompile with a "
-                    f"smaller n1 / width_cap"
-                    + (f" or shrink the batch (the staged window "
+                    "smaller n1 / width_cap"
+                    + (" or shrink the batch (the staged window "
                        f"carries {lanes} interleaved lanes)"
                        if lanes > 1 else ""))
             for write, val in pending:
@@ -1406,7 +1406,7 @@ class BinaryExecutor:
                     f"edge-softmax row working set ({nbytes} bytes + "
                     f"{self._static_bytes} resident weights) exceeds "
                     f"resident_budget_bytes={self.resident_budget_bytes}"
-                    f"; recompile with a smaller n1 / width_cap")
+                    "; recompile with a smaller n1 / width_cap")
             for ln in range(L):
                 scored = [(staged[f"l{ln}:s{k}:{s}"],
                            staged[f"m{k}:{s}"]) for k, s in row_tiles]

@@ -233,13 +233,32 @@ def from_program(program: Program, binary: Optional[bytes] = None,
                  graph_name: str = "graph",
                  source: Optional[Any] = None,
                  n_devices: Optional[int] = None) -> CompiledProgram:
-    """Wrap an object-graph :class:`Program` into a CompiledProgram."""
+    """Wrap an object-graph :class:`Program` into a CompiledProgram.
+
+    The manifest gains a ``dep_graph`` section — the RAW/WAR/WAW hazard
+    DAG re-derived from the freshly assembled binary (see
+    :mod:`repro.verify.hazards`) — so every ``.gagi`` bundle carries its
+    own dependence structure for downstream schedulers and the trace
+    race detector."""
     from repro.core.isa import assemble
     if binary is None:
         binary = assemble(program.all_instrs())
     weights = {k: np.asarray(v) for k, v in program.model.weights.items()}
+    manifest = build_manifest(program, graph_name, n_devices=n_devices)
+    manifest["dep_graph"] = _dep_graph_section(binary, manifest,
+                                               program.pgraph)
     return CompiledProgram(
-        binary=binary,
-        manifest=build_manifest(program, graph_name, n_devices=n_devices),
+        binary=binary, manifest=manifest,
         weights=weights, pgraph=program.pgraph, t_loc=t_loc,
         cache_key=cache_key, source=source)
+
+
+def _dep_graph_section(binary: bytes, manifest: dict, pgraph) -> dict:
+    from repro.verify.hazards import dep_graph_manifest
+    from repro.verify.model import build_model
+
+    from .decoder import decode_binary
+    plan = decode_binary(binary)
+    model = build_model(plan, manifest["layers"], manifest["geometry"],
+                        pgraph=pgraph)
+    return dep_graph_manifest(model, manifest["layers"])

@@ -22,7 +22,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _spdmm_kernel(cols_ref, vals_ref, h_ref, o_ref, *, width: int):

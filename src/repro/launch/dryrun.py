@@ -20,7 +20,6 @@ import traceback  # noqa: E402
 from typing import Any, Dict, Optional  # noqa: E402
 
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 

@@ -59,7 +59,7 @@ def fmt_row(r: Dict) -> str:
                 f"skip: {r['skipped'][:42]}… |")
     if r.get("status") != "ok":
         return (f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
-                f"ERROR |")
+                "ERROR |")
     rf = r["roofline"]
     mf = model_flops(r)
     n_dev = r["n_devices"]

@@ -16,7 +16,6 @@ plugs in).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import sys
 import time
 

@@ -22,14 +22,11 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import latest_step, restore, save
 from repro.configs import get_config, get_smoke_config
 from repro.data import synthetic_batches
-from repro.distributed import sharding as SH
 from repro.distributed.compression import ef_transform, init_error_feedback
-from repro.launch.mesh import make_local_mesh
 from repro.models.steps import (build_model, init_train_state,
                                 make_train_step)
 

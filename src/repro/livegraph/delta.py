@@ -52,7 +52,7 @@ class GraphDelta:
 
     def __init__(self, base_vertices: int, feat_dim: int = 0) -> None:
         if base_vertices < 0:
-            raise ValueError(f"base_vertices must be >= 0, "
+            raise ValueError("base_vertices must be >= 0, "
                              f"got {base_vertices}")
         self.base_vertices = int(base_vertices)
         self.feat_dim = int(feat_dim)
@@ -129,7 +129,7 @@ class GraphDelta:
                     if not live_adds:
                         raise KeyError(
                             f"remove_edge({pair[0]}, {pair[1]}): edge "
-                            f"already removed by this delta")
+                            "already removed by this delta")
                 else:
                     # must_exist: the removal targeted base edges, not
                     # adds from this very delta.

@@ -39,7 +39,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 

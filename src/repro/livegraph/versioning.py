@@ -101,11 +101,11 @@ class GraphVersion:
         if (theirs.n1, theirs.n2, theirs.width_cap) != \
                 (mine.n1, mine.n2, mine.width_cap):
             raise ValueError(
-                f"cannot bind program compiled for tile geometry "
+                "cannot bind program compiled for tile geometry "
                 f"(n1, n2, cap)=({theirs.n1}, {theirs.n2}, "
                 f"{theirs.width_cap}) to a live graph partitioned at "
                 f"({mine.n1}, {mine.n2}, {mine.width_cap}); give the "
-                f"Engine and the GraphVersionStore the same geometry")
+                "Engine and the GraphVersionStore the same geometry")
         key = prog.cache_key or f"id:{id(prog)}"
         with self._lock:
             bound = self._bound.get(key)

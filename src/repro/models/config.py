@@ -8,7 +8,6 @@ ssm); family-specific fields are optional.  Configs are constructed by
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import jax.numpy as jnp
 

@@ -6,8 +6,7 @@ batch dims.  f32 accumulation for norms/softmax; storage dtype from config.
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

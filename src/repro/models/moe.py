@@ -20,8 +20,7 @@ load balancing reappearing as the router's aux loss + capacity factor.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ formulation (no serial recurrence in train/prefill); decode carries the
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

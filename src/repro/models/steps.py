@@ -4,8 +4,7 @@ These are the functions the dry-run lowers and the examples execute.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

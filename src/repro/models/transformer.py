@@ -16,7 +16,6 @@ Public surface:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax

@@ -8,7 +8,7 @@ reusing DecoderLM with cross_attn_every=1).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import dataclasses
 import jax
@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from . import attention as A
 from .config import ModelConfig
-from .layers import Params, dense_init, rms_norm, swiglu, swiglu_init
+from .layers import Params, rms_norm, swiglu, swiglu_init
 from .transformer import DecoderLM, _remat
 
 

@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.perfmodel import (DEFAULT_CONSTANTS, ModelConstants,
                                   layer_costs)
@@ -158,11 +158,11 @@ class ConformanceReport:
         if self.halo:
             h = self.halo
             out += ["", "### Halo exchange (mesh)", "",
-                    f"- gathered (measured all_gather): "
+                    "- gathered (measured all_gather): "
                     f"{h['gathered_bytes']} bytes",
-                    f"- targeted estimate (placement): "
+                    "- targeted estimate (placement): "
                     f"{h['estimated_bytes']} bytes",
-                    f"- gap (gathered - estimated, positive = planner "
+                    "- gap (gathered - estimated, positive = planner "
                     f"under-estimate): {h['gap_bytes']} bytes "
                     f"({100 * h['gap_fraction']:.1f}% of estimate)"]
         if self.critical_path:

@@ -56,7 +56,7 @@ class MetricSpec:
     def __post_init__(self) -> None:
         if self.direction not in ("higher", "lower"):
             raise ValueError(
-                f"direction must be 'higher' or 'lower', "
+                "direction must be 'higher' or 'lower', "
                 f"got {self.direction!r}")
 
 
@@ -109,7 +109,7 @@ class TrajectoryReport:
         lines.append("**PASS** — no metric left its tolerance band."
                      if self.ok else
                      f"**FAIL** — {len(self.regressions)} metric(s) "
-                     f"regressed past their tolerance bands.")
+                     "regressed past their tolerance bands.")
         lines.append("")
         for f in self.files:
             lines.append(f"## {f.name}")
@@ -273,6 +273,10 @@ DEFAULT_SPECS: Dict[str, List[MetricSpec]] = {
                    note="more passes = coalescing broke"),
         MetricSpec("traffic.same_key.batched.batch_occupancy",
                    "higher", 0.0, 0.01),
+        MetricSpec("verify.checks_passed", "higher", 0.0, 0.0,
+                   note="static verifier coverage must never shrink"),
+        MetricSpec("verify.checks_failed", "lower", 0.0, 0.0,
+                   note="shipped programs must verify clean"),
     ],
     "BENCH_sample.json": [
         MetricSpec("bucketed_speedup", "higher", 0.9),
@@ -283,6 +287,10 @@ DEFAULT_SPECS: Dict[str, List[MetricSpec]] = {
                    0.0, 0.02,
                    note="bucketing must keep cache keys colliding"),
         MetricSpec("bucketed_batched.mean_batch_size", "higher", 0.5),
+        MetricSpec("verify.checks_passed", "higher", 0.0, 0.0,
+                   note="static verifier coverage must never shrink"),
+        MetricSpec("verify.checks_failed", "lower", 0.0, 0.0,
+                   note="shipped programs must verify clean"),
     ],
     "BENCH_live.json": [
         MetricSpec("cutover.dropped", "lower", 0.0, 0.0,
@@ -297,6 +305,10 @@ DEFAULT_SPECS: Dict[str, List[MetricSpec]] = {
         MetricSpec("updates.1.retention", "higher", 0.0, 0.05,
                    note="single-edge delta must retain ~all tiles"),
         MetricSpec("updates.16.retention", "higher", 0.0, 0.15),
+        MetricSpec("verify.checks_passed", "higher", 0.0, 0.0,
+                   note="static verifier coverage must never shrink"),
+        MetricSpec("verify.checks_failed", "lower", 0.0, 0.0,
+                   note="shipped programs must verify clean"),
     ],
     "BENCH_fullgraph.json": [
         MetricSpec("models.0.mesh.bit_identical_to_host", "higher",
@@ -338,5 +350,9 @@ DEFAULT_SPECS: Dict[str, List[MetricSpec]] = {
         MetricSpec("models.0.conformance.calibration_gain",
                    "higher", 1.0, 0.05,
                    note="LS calibration must keep reducing model error"),
+        MetricSpec("verify.checks_passed", "higher", 0.0, 0.0,
+                   note="static verifier coverage must never shrink"),
+        MetricSpec("verify.checks_failed", "lower", 0.0, 0.0,
+                   note="shipped programs must verify clean"),
     ],
 }

@@ -6,7 +6,6 @@ decision (distributed/zero.py), not an algorithm change.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, NamedTuple, Optional
 
 import jax

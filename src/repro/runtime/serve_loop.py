@@ -105,7 +105,7 @@ class ServeLoop:
             self.metrics.record_rejection()
             raise QueueFullError(
                 f"serving queue at capacity ({self.max_queue}); "
-                f"drain or retry later")
+                "drain or retry later")
         req, pin = self._resolve_live(req)
         now = self.clock()
         idx = self._seq

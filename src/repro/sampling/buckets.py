@@ -79,7 +79,7 @@ def bucket_for(g: Graph, cfg: PartitionConfig) -> Bucket:
         raise ValueError(
             f"max in-degree {int(indeg.max())} needs ELL width {width} "
             f"> width_cap {cfg.width_cap}; raise the cap or lower the "
-            f"sampling fanouts")
+            "sampling fanouts")
     nb = -(-v // cfg.n1)
     e = next_pow2(max(g.n_edges, 1))
     e = max(e, nb * nb * width)          # template floor: fill every tile

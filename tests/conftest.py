@@ -5,6 +5,10 @@ import sys
 # benches must see 1 device (the dry-run sets 512 in its own process).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# Every Engine.compile in the test suite runs the repro.verify static
+# checker suite (fresh compiles + livegraph rebinds).
+os.environ.setdefault("REPRO_VERIFY", "1")
+
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)

@@ -1,7 +1,6 @@
 """Checkpoint: atomic save/restore, resume, elastic re-mesh, crash safety."""
 import json
 import os
-import shutil
 import subprocess
 import sys
 

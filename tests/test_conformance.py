@@ -22,8 +22,8 @@ import pytest
 
 from repro.core import graph as G
 from repro.core.passes.partition import PartitionConfig
-from repro.core.perfmodel import (DEFAULT_CONSTANTS, ModelConstants,
-                                  block_costs, layer_costs, predict_loh)
+from repro.core.perfmodel import (ModelConstants, block_costs, layer_costs,
+    predict_loh)
 from repro.engine import Engine
 from repro.engine.executor import ExecStats
 from repro.obs import (DEFAULT_SPECS, attribution_table, build_dag,

@@ -1,7 +1,6 @@
 """Distributed substrate tests.  Multi-device cases run in a subprocess
 with XLA_FLAGS=--xla_force_host_platform_device_count=8 (the main test
 process stays single-device per the dry-run contract)."""
-import json
 import os
 import subprocess
 import sys

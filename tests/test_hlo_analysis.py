@@ -3,10 +3,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.launch.hlo_analysis import (_shape_bytes, _split_args, analyze,
-                                       parse_hlo)
+from repro.launch.hlo_analysis import _shape_bytes, _split_args, analyze
 
 
 def _compile_text(fn, *specs):

@@ -1,10 +1,8 @@
 """Unit tests for the IR (paper Table 2) and its graph surgery."""
-import numpy as np
-import pytest
 
 from repro.core import gnn_builders as B
 from repro.core import graph as G
-from repro.core.ir import AggOp, Activation, LayerIR, LayerType, ModelIR
+from repro.core.ir import AggOp, LayerIR, LayerType
 
 
 def _g(nv=50, ne=120, f=8, c=3, seed=0):

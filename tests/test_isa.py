@@ -1,5 +1,4 @@
 """128-bit ISA encode/decode roundtrip + binary format (paper §5.3)."""
-import numpy as np
 import pytest  # noqa: F401
 
 from _hypothesis_compat import given, settings, st  # noqa: E402
@@ -7,8 +6,7 @@ from _hypothesis_compat import given, settings, st  # noqa: E402
 from repro.core import gnn_builders as B
 from repro.core import graph as G
 from repro.core.compiler import CompileOptions, run_pipeline
-from repro.core.isa import (Buf, Instr, Opcode, Region, assemble,
-                            disassemble)
+from repro.core.isa import Instr, Opcode, assemble, disassemble
 from repro.core.passes.partition import PartitionConfig
 
 

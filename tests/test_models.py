@@ -11,10 +11,8 @@ from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.data import synthetic_batches
 from repro.models import ssm as SSM
 from repro.models import xlstm_blocks as XL
-from repro.models.config import SHAPES
-from repro.models.steps import (build_model, init_train_state,
-                                input_specs, make_serve_step,
-                                make_train_step)
+from repro.models.steps import (build_model, init_train_state, make_serve_step,
+    make_train_step)
 from repro.models.transformer import build_segments
 
 

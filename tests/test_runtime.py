@@ -22,8 +22,8 @@ from repro.core import graph as G
 from repro.core.passes.partition import PartitionConfig
 from repro.core.passes.schedule import lpt_assign
 from repro.engine import Engine, InferenceRequest, stack_features
-from repro.runtime import (Batch, Batcher, Metrics, OverlayPool,
-                           QueueFullError, ServeLoop, warm_pool)
+from repro.runtime import (Batch, Batcher, OverlayPool, QueueFullError,
+    ServeLoop, warm_pool)
 
 GEOM = PartitionConfig(n1=32, n2=8)
 
