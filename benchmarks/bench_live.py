@@ -84,6 +84,11 @@ def bench_updates(geom, g, model: str, delta_sizes: List[int],
     live = LiveGraphServer(store)
     x = np.asarray(G.random_features(g, seed=2))
     eng.submit(InferenceRequest(model, live, x))     # compile v0 once
+    # Arm the sparsity-adaptive remapper: every content-only rebind
+    # below then re-prices exactly the delta-patched tiles in place,
+    # and the bound manifest's remap record times that incremental
+    # pass (reported next to the patch+rebind latency).
+    eng.remap(eng.compile(model, live))
     out = {}
     g_mut = g
     for size in delta_sizes:
@@ -93,7 +98,7 @@ def bench_updates(geom, g, model: str, delta_sizes: List[int],
 
         t0 = time.perf_counter()
         v = live.apply(d)                            # patch + cutover
-        eng.compile(model, live)                     # rebind (no compile)
+        bound = eng.compile(model, live)             # rebind (no compile)
         t_inc = time.perf_counter() - t0
 
         cold = Engine(geometry=geom, n_pes=n_pes)
@@ -104,6 +109,7 @@ def bench_updates(geom, g, model: str, delta_sizes: List[int],
         assert v.stats.structural_change or \
             eng.stats.compiles == compiles_before, \
             "content-only delta must hit the program cache"
+        rec = (bound.manifest or {}).get("remap")
         out[str(size)] = {
             "incremental_ms": round(t_inc * 1e3, 3),
             "full_recompile_ms": round(t_full * 1e3, 3),
@@ -112,6 +118,9 @@ def bench_updates(geom, g, model: str, delta_sizes: List[int],
             "tiles_total": v.stats.tiles_after,
             "retention": round(v.stats.retention, 4),
             "structural_change": v.stats.structural_change,
+            # incremental remap: only the delta-patched tiles re-priced
+            "remap_ms": rec["remap_ms"] if rec else None,
+            "tiles_repriced": len(v.stats.patched) if rec else None,
         }
         g_mut = g_next
     out["compiles_incremental_path"] = eng.stats.compiles

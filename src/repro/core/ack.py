@@ -84,6 +84,32 @@ def _spdmm_xla(h_src, cols, vals, mask, acc, flag, op: str):
 
 
 # --------------------------------------------------------------------------- #
+# Dense-aggregate GEMM: densified SpDMM for remapped high-density tiles
+# (Dynasparse-style sparsity-adaptive mode switch).  The ELL tile is
+# scattered into an (n1, n1_src) dense adjacency block and dispatched as
+# a matmul on the systolic-array path.  Pad slots carry cols == 0 /
+# vals == 0, so scatter-add deposits zeros harmlessly; duplicate cols
+# sum, matching SpDMM's per-edge accumulation.
+# --------------------------------------------------------------------------- #
+@functools.partial(jax.jit, static_argnames=("n_src",))
+def densify_tile(cols, vals, n_src: int) -> jnp.ndarray:
+    """Scatter an ELL slice into its (n1, n_src) dense adjacency block.
+    Executors cache the result per (j, k, s) so one densification feeds
+    every output fiber's GEMM dispatch."""
+    rows = jnp.arange(cols.shape[0])[:, None]
+    return jnp.zeros((cols.shape[0], n_src),
+                     jnp.float32).at[rows, cols].add(vals)
+
+
+@jax.jit
+def _gemm_agg_xla(cols, vals, h_src, acc):
+    rows = jnp.arange(cols.shape[0])[:, None]
+    dense = jnp.zeros((cols.shape[0], h_src.shape[0]),
+                      jnp.float32).at[rows, cols].add(vals)
+    return acc + jnp.dot(dense, h_src, preferred_element_type=jnp.float32)
+
+
+# --------------------------------------------------------------------------- #
 # SDDMM mode: per-edge inner products (Algorithm 3).
 #   score[r, k] = <h_dst[r], h_src[cols[r, k]]>
 # --------------------------------------------------------------------------- #
@@ -133,6 +159,15 @@ class ACK:
         if self.backend == "pallas":
             return acc + self._kops.gemm(h, w, interpret=self.interpret)
         return _gemm_xla(h, w, acc)
+
+    # -- Dense-aggregate GEMM (remapped SpDMM tiles) --------------------- #
+    def gemm_agg(self, cols, vals, h_src, acc):
+        """Aggregate a remapped ELL tile by densifying it and running the
+        GEMM datapath.  Always the xla scatter+dot path — densification is
+        a gather-free matmul feed, which is exactly what the pallas GEMM
+        kernel would see anyway."""
+        _count(("gemm_agg", h_src.shape, cols.shape, self.backend))
+        return _gemm_agg_xla(cols, vals, h_src, acc)
 
     # -- SpDMM ---------------------------------------------------------- #
     def spdmm(self, h_src, cols, vals, mask, acc, flag, op: str = "sum"):

@@ -116,9 +116,12 @@ def map_layer(
                 ins.append(Instr(Opcode.MEM_WR, flags=FLAG_LAST,
                                  args=(Buf.RESULT, Region.OUT_SUBFIBER,
                                        i, j)))
+                # Load estimate in the same units as the sddmm branch and
+                # the conformance oracle (work scales with the layer's
+                # feature width, not the padded fiber tile).
                 blocks.append(TilingBlock(
                     l.layer_id, "spdmm", i, j, ks,
-                    cost=max(nnz_total, 1) * n2, instrs=ins))
+                    cost=max(nnz_total, 1) * l.f_in, instrs=ins))
 
     elif l.layer_type == LayerType.LINEAR:
         for i in range(fo):                      # output fiber

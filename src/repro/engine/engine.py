@@ -436,6 +436,39 @@ class Engine:
         _export_gagi(prog)
         return prog
 
+    def remap(self, prog: CompiledProgram, report: Any = None, *,
+              source: str = "auto", force: Any = None, margin: float = 0.1,
+              probe: bool = False,
+              modes: Optional[Sequence[str]] = None) -> CompiledProgram:
+        """Sparsity-adaptive kernel remapping of a compiled program
+        (``repro.core.passes.remap``): re-encode each AGGREGATE tile's
+        kernel fields — SpDMM as-is, densified GEMM, or skip-empty —
+        from the tile's measured/derived density and a cost oracle.  No
+        recompile, no new partition; the cache key is preserved.
+
+        ``report`` supplies the oracle's machine constants: a
+        ``repro.obs.conformance.ConformanceReport`` (its LS-fitted
+        ``calibrated_constants``), a plain constants dict, or ``None``
+        for the paper-default roofline.  ``probe=True`` instead
+        microbenchmarks the two ACK kernels at the program's tile
+        geometry on this engine's backend.  ``force``/``modes`` pin or
+        restrict decisions (oracle tests / ablations).
+
+        If ``prog`` is the cached entry for its key, the cache is
+        updated in place (slim copy, same key), so subsequent cache
+        hits — and livegraph rebinds on top of them — stay remapped.
+        """
+        from repro.core.passes.remap import remap_program
+        new = remap_program(prog, source=source, constants=report,
+                            margin=margin, force=force, modes=modes,
+                            probe=probe, ack=self._executor.ack)
+        if prog.cache_key and self.cache.get(prog.cache_key) is not None:
+            self.cache.put(prog.cache_key, dataclasses.replace(
+                new, source=None, default_residency=None))
+        if self.verify:
+            self._verify_program(new)
+        return new
+
     def _verify_program(self, prog: CompiledProgram) -> None:
         from repro.verify import VerifyError, verify_program
         tracer = get_tracer()

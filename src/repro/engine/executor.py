@@ -62,8 +62,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ack import ACK
+from repro.core.ack import ACK, densify_tile
 from repro.core.ir import Activation, AggOp, LayerType
+from repro.core.isa import Opcode
 from repro.core.reference import apply_activation
 from repro.obs.tracer import get_tracer
 
@@ -117,6 +118,10 @@ class ExecStats:
     tile_ops: int = 0
     layers: int = 0
     runs: int = 0
+    # Sparsity-adaptive remapping telemetry (repro.core.passes.remap).
+    tiles_remapped: int = 0         # aggregate steps run on the GEMM path
+    tiles_skipped: int = 0          # aggregate steps elided by skip-empty
+    tile_ops_by_mode: Optional[Dict[str, int]] = None
     # Liveness / streaming telemetry (peaks are high-water marks).
     peak_live_outputs: int = 0      # layer outputs alive at once
     peak_live_bytes: int = 0        # bytes of those outputs
@@ -143,10 +148,21 @@ class ExecStats:
             self.per_layer = []
         self.per_layer.append(rec)
 
+    def note_mode(self, mode: str, n: int = 1) -> None:
+        if self.tile_ops_by_mode is None:
+            self.tile_ops_by_mode = {}
+        self.tile_ops_by_mode[mode] = \
+            self.tile_ops_by_mode.get(mode, 0) + n
+
     def add(self, other: "ExecStats") -> None:
         self.tile_ops += other.tile_ops
         self.layers += other.layers
         self.runs += other.runs
+        self.tiles_remapped += other.tiles_remapped
+        self.tiles_skipped += other.tiles_skipped
+        if other.tile_ops_by_mode is not None:
+            for m, n in other.tile_ops_by_mode.items():
+                self.note_mode(m, n)
         self.shards_streamed += other.shards_streamed
         self.h2d_bytes += other.h2d_bytes
         self.halo_bytes += other.halo_bytes
@@ -491,7 +507,16 @@ class _ShardKernel:
 
 class _AggregateKernel(_ShardKernel):
     """SpDMM-mode aggregation (paper Alg. 6): accumulate source
-    sub-fibers through a destination shard's ELL tiles."""
+    sub-fibers through a destination shard's ELL tiles.
+
+    A sparsity-remapped binary (``repro.core.passes.remap``) may flip
+    individual SPDMM steps to GEMM: the ELL slice is densified into an
+    (n1, n1) adjacency block — cached per (j, k, s) so the fiber loop
+    densifies once — and dispatched on the systolic-array path.
+    Skip-empty elisions never reach here: the decoder drops NOPed steps,
+    so ``tp.compute`` only holds live work (staging follows it)."""
+
+    _DENSE_CACHE_CAP = 4         # (n1, n1) f32 blocks — bounded footprint
 
     def __init__(self, ex, lp, meta, pg, weights):
         super().__init__(ex, lp, meta, pg, weights)
@@ -503,11 +528,23 @@ class _AggregateKernel(_ShardKernel):
             jnp.full((n1, n2), -3.4e38, jnp.float32) if self.op == "max"
             else jnp.full((n1, n2), 3.4e38, jnp.float32)
             if self.op == "min" else jnp.zeros((n1, n2), jnp.float32))
+        self._dense: Dict[Tuple[int, int, int], Any] = {}
+
+    @staticmethod
+    def _live_slices(tps: List[TilePlan]) -> set:
+        """(k, s) tiles the decoded stream actually computes — after a
+        skip-empty remap this is a subset of the shard row's tiles, so
+        elided tiles are never staged either."""
+        return {(ins.args[1], ins.args[3] >> 1)
+                for tp in tps for ins in tp.compute}
 
     def stage_shared(self, j, tps):
         arrs: Dict[str, Any] = {}
+        live = self._live_slices(tps)
         for k in range(self.pg.n_blocks):
             for s, t in enumerate(self.pg.tiles.get((j, k), [])):
+                if (k, s) not in live:
+                    continue
                 arrs[f"c{k}:{s}"] = t.cols
                 arrs[f"v{k}:{s}"] = t.vals
                 arrs[f"m{k}:{s}"] = t.edge_pos >= 0
@@ -520,24 +557,43 @@ class _AggregateKernel(_ShardKernel):
         arrs = super().stage_lane(j, tps, io, srcs)
         if self.dyn:
             ew = io["ew"]
+            live = self._live_slices(tps)
             for k in range(self.pg.n_blocks):
                 for s, t in enumerate(self.pg.tiles.get((j, k), [])):
-                    arrs[f"e{k}:{s}"] = ew[np.maximum(t.edge_pos, 0)]
+                    if (k, s) in live:
+                        arrs[f"e{k}:{s}"] = ew[np.maximum(t.edge_pos, 0)]
         return arrs
 
     def tile(self, tp, env):
         j, i, n2 = tp.out_j, tp.out_i, self.n2
         acc = self.init
         flag = jnp.zeros((self.n1,), bool)
-        for ins in tp.compute:           # SPDMM steps, stream order
+        for ins in tp.compute:           # SPDMM/GEMM steps, stream order
             k, ii = ins.args[1], ins.args[2]
             s, dyn = ins.args[3] >> 1, ins.args[3] & 1
             h_tile = env.h_tile(k, ii)
             cols, v, mask, _ = env.graph_tile(j, k, s)
             if dyn:
                 v = env.edge_weight_tile(j, k, s)
-            acc, flag = self.ex.ack.spdmm(h_tile, cols, v, mask, acc,
-                                          flag, self.op)
+            if ins.op == Opcode.GEMM:    # remapped dense-aggregate step
+                if dyn:
+                    # per-lane edge weights: densify inline, no cache
+                    acc = self.ex.ack.gemm_agg(cols, v, h_tile, acc)
+                else:
+                    dense = self._dense.get((j, k, s))
+                    if dense is None:
+                        if len(self._dense) >= self._DENSE_CACHE_CAP:
+                            self._dense.clear()
+                        dense = densify_tile(cols, v, n_src=self.n1)
+                        self._dense[(j, k, s)] = dense
+                    acc = self.ex.ack.gemm(dense, h_tile, acc)
+                flag = flag | mask.any(axis=1)
+                self.ex.stats.tiles_remapped += 1
+                self.ex.stats.note_mode("gemm")
+            else:
+                acc, flag = self.ex.ack.spdmm(h_tile, cols, v, mask, acc,
+                                              flag, self.op)
+                self.ex.stats.note_mode("spdmm")
             self.ex.stats.tile_ops += 1
         if self.op in ("max", "min"):
             acc = jnp.where(flag[:, None], acc, 0.0)
@@ -576,6 +632,7 @@ class _LinearKernel(_ShardKernel):
                 self.Wj, (k * n2, i * n2), (n2, n2))
             acc = self.ex.ack.gemm(h_tile, w_tile, acc)
             self.ex.stats.tile_ops += 1
+            self.ex.stats.note_mode("gemm")
         if self.b is not None:
             acc = acc + jax.lax.dynamic_slice(self.b, (i * n2,), (n2,))
         return self.ex._epilogue(tp, self.meta, acc, self.weights,
@@ -602,6 +659,7 @@ class _VAddKernel(_ShardKernel):
         tb = env.operand_tile("b", j, i)
         v = self.ex.ack.vadd(ta, tb, self.alpha, self.beta)
         self.ex.stats.tile_ops += 1
+        self.ex.stats.note_mode("vadd")
         return self.ex._epilogue(tp, self.meta, v, self.weights,
                                  i * n2, (i + 1) * n2)
 
@@ -634,6 +692,7 @@ class _VertexActKernel(_ShardKernel):
         else:
             v = self.ex.ack.act(v, Activation(op.act))
         self.ex.stats.tile_ops += 1
+        self.ex.stats.note_mode("act")
         return v
 
 
@@ -679,6 +738,7 @@ class _EdgeScoreKernel(_ShardKernel):
             acc = self.ex.ack.sddmm(h_dst, h_src, cols, mask, acc,
                                     pair_sum=self.pair)
             self.ex.stats.tile_ops += 1
+            self.ex.stats.note_mode("sddmm")
         return self.ex._epilogue(tp, self.meta, acc, self.weights,
                                  0, self.n2)
 
@@ -714,6 +774,14 @@ class BinaryExecutor:
     # ------------------------------------------------------------------ #
     def _residency(self, prog: CompiledProgram) -> dict:
         return resolve_residency(prog)
+
+    def _note_skips(self, prog: CompiledProgram) -> None:
+        """Credit the run's skip-empty elisions from the remap record —
+        the decoder drops NOPed steps, so the executor can't observe
+        them; the record is how many compute steps one pass elides."""
+        rec = prog.manifest.get("remap")
+        if rec:
+            self.stats.tiles_skipped = int(rec.get("skipped_tile_ops", 0))
 
     def _make_kernel(self, lp: LayerPlan, meta: dict, pg,
                      weights) -> _ShardKernel:
@@ -833,13 +901,18 @@ class BinaryExecutor:
         mode = _KERNEL_MODES[lt]
         tiles = recs["tiles"]
         if lt == LayerType.AGGREGATE:
-            ops = len(tp.compute)
+            # Per-instruction mode: a sparsity-remapped binary may carry
+            # GEMM steps inside an aggregate layer.
             for ins in tp.compute:
+                imode = "gemm" if ins.op == Opcode.GEMM else mode
                 key = (tp.out_j, ins.args[1], ins.args[3] >> 1)
                 r = tiles.get(key)
                 if r is None:
-                    tiles[key] = r = {"kernel": mode, "ops": 0}
+                    tiles[key] = r = {"kernel": imode, "ops": 0}
+                r["kernel"] = imode
                 r["ops"] += 1
+                recs["modes"][imode] = recs["modes"].get(imode, 0) + 1
+            return
         elif lt == LayerType.VECTOR_INNER:
             ops = len(tp.compute)
             key = (tp.out_j, tp.tile_k, tp.slice_id)
@@ -938,6 +1011,7 @@ class BinaryExecutor:
             return self._run_host(prog, [x], weights)[0]
         self._gate_device_budget(prog, int(x.shape[1]))
         self.stats = ExecStats(runs=1)
+        self._note_skips(prog)
         tracer = get_tracer()
         self._begin_profile()
         with tracer.span("decode", cat="exec", track="exec:device",
@@ -1213,6 +1287,7 @@ class BinaryExecutor:
         once for the whole batch, each lane adds only its source
         sub-fibers (``stage_lane``) — host-path batching."""
         self.stats = ExecStats(runs=1)
+        self._note_skips(prog)
         tracer = get_tracer()
         self._begin_profile()
         with tracer.span("decode", cat="exec", track="exec:host",
@@ -1513,6 +1588,7 @@ class BinaryExecutor:
             x_slabs.append(jax.device_put(slab, devs[d]))
 
         self.stats = ExecStats(runs=1, n_devices=D)
+        self._note_skips(prog)
         per_dev = [{"device": d, "tile_ops": 0, "shards": 0,
                     "halo_bytes": 0, "blocks": len(owned[d])}
                    for d in range(D)]

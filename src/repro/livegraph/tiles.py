@@ -363,10 +363,33 @@ class TileStore:
                 eid=np.concatenate(parts_eid).astype(np.int32),
                 seq=np.concatenate(parts_seq))
             if te.n == 0:
-                edges.pop(jk, None)
-                tiles.pop(jk, None)
-                hashes.pop(jk, None)
-                stats.tiles_dropped += 1
+                if old is None:
+                    # Adds and removes netted to zero inside a tile
+                    # that never existed — nothing to keep.
+                    stats.tiles_dropped += 1
+                    continue
+                # An existing tile emptied by the delta keeps its slice
+                # COUNT as zero-nnz LANE-wide slices: the structural
+                # signature (and with it the program-cache key and each
+                # binary's per-slice instruction addressing) depends on
+                # (j, k, n_slices), so preserving the count turns
+                # "tile went empty" into a content-only delta.  The
+                # bind-time remapper elides these slices as SKIP.
+                empty = [
+                    ELLTile(jk[0], jk[1],
+                            np.zeros((n1, LANE), np.int32),
+                            np.zeros((n1, LANE), np.float32),
+                            np.full((n1, LANE), -1, np.int32), nnz=0)
+                    for _ in self.tiles[jk]]
+                edges[jk] = te
+                tiles[jk] = empty
+                hashes[jk] = tile_hash(empty)
+                stats.tiles_patched += 1
+                stats.patched[f"{jk[0]}:{jk[1]}"] = {
+                    "nnz": 0, "slices": len(empty),
+                    "width": sum(t.width for t in empty),
+                    "density": 0.0,
+                }
                 continue
             # (dst, src, birth-seq): the partitioner's stable
             # (dst, src, COO-position) order, reproduced incrementally.

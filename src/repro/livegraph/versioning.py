@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 from repro.core.graph import Graph
 from repro.core.passes.partition import PartitionConfig
@@ -51,7 +51,11 @@ class GraphVersion:
         self.stats = stats
         self.pgraph = store.build_pgraph()
         self._graph: Optional[Graph] = None
-        self._bound: Dict[str, object] = {}
+        # key -> (source binary, bound program).  The source binary is
+        # kept separately because rebinding may itself rewrite the
+        # binary (incremental remap below), so ``bound.binary`` is not
+        # a stable identity for "did the caller hand us a new program".
+        self._bound: Dict[str, Tuple[bytes, object]] = {}
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------------ #
@@ -108,23 +112,46 @@ class GraphVersion:
                 "Engine and the GraphVersionStore the same geometry")
         key = prog.cache_key or f"id:{id(prog)}"
         with self._lock:
-            bound = self._bound.get(key)
-            if bound is None or bound.binary is not prog.binary:
-                manifest = dict(prog.manifest)
-                geo = dict(manifest.get("geometry", {}))
-                geo.update(n_vertices=self.pgraph.n_vertices,
-                           n_edges=self.pgraph.n_edges,
-                           n_blocks=self.pgraph.n_blocks)
-                manifest["geometry"] = geo
-                manifest["graph_name"] = self.graph_name
-                manifest["graph_version"] = self.vid
-                manifest["content_signature"] = self.content_signature
-                manifest["tile_stats"] = tile_density_stats(self.pgraph)
-                bound = dataclasses.replace(
-                    prog, pgraph=self.pgraph, manifest=manifest,
-                    source=None)
-                self._bound[key] = bound
+            entry = self._bound.get(key)
+            if entry is not None and entry[0] is prog.binary:
+                return entry[1]
+            manifest = dict(prog.manifest)
+            geo = dict(manifest.get("geometry", {}))
+            geo.update(n_vertices=self.pgraph.n_vertices,
+                       n_edges=self.pgraph.n_edges,
+                       n_blocks=self.pgraph.n_blocks)
+            manifest["geometry"] = geo
+            manifest["graph_name"] = self.graph_name
+            manifest["graph_version"] = self.vid
+            manifest["content_signature"] = self.content_signature
+            manifest["tile_stats"] = tile_density_stats(self.pgraph)
+            bound = dataclasses.replace(
+                prog, pgraph=self.pgraph, manifest=manifest,
+                source=None)
+            if manifest.get("remap") is not None:
+                bound = self._rebind_remap(bound)
+            self._bound[key] = (prog.binary, bound)
             return bound
+
+    def _rebind_remap(self, bound):
+        """Re-run the sparsity-adaptive remapper against this version's
+        tile densities.  A delta version (``self.stats`` is set) only
+        re-prices the tiles its delta actually patched — untouched
+        tiles keep their encoded mode and record entry verbatim; a
+        version with no patch record re-prices everything."""
+        from repro.core.passes.remap import remap_program
+
+        rec = bound.manifest["remap"]
+        only = None
+        if self.stats is not None:
+            only = sorted(self.stats.patched)
+            if not only:
+                return bound
+        return remap_program(
+            bound, source="tile_stats",
+            constants=rec.get("constants"),
+            margin=float(rec.get("margin", 0.1)),
+            only_tiles=only)
 
     def release_bindings(self) -> None:
         """Drop the bound-program cache (reclaim path)."""

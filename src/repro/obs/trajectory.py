@@ -350,6 +350,18 @@ DEFAULT_SPECS: Dict[str, List[MetricSpec]] = {
         MetricSpec("models.0.conformance.calibration_gain",
                    "higher", 1.0, 0.05,
                    note="LS calibration must keep reducing model error"),
+        # Sparsity-adaptive remapping (repro.core.passes.remap): the
+        # re-encoded program must stay at least as fast as the
+        # canonical one (wide band — wall clock), and must stay
+        # bit-identical across the device/streaming/mesh paths
+        # (zero-width — semantic flag).
+        MetricSpec("models.0.remap.remap_speedup", "higher", 0.5,
+                   note="remapped program must not regress vs "
+                        "canonical SpDMM encoding"),
+        MetricSpec("models.0.remap.remap_bit_identical", "higher",
+                   0.0, 0.0,
+                   note="remapped outputs must match the baseline "
+                        "across residency paths"),
         MetricSpec("verify.checks_passed", "higher", 0.0, 0.0,
                    note="static verifier coverage must never shrink"),
         MetricSpec("verify.checks_failed", "lower", 0.0, 0.0,

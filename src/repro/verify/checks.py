@@ -231,14 +231,26 @@ _ALLOWED_COMPUTE = {
 
 def check_kernel_legality(model: DefUseModel, report: VerifyReport,
                           n_pes: Optional[int] = None, pgraph=None,
-                          rebound: bool = False) -> None:
+                          rebound: bool = False,
+                          remap: Optional[dict] = None) -> None:
     """Per-opcode argument conventions vs the tile geometry.
 
     ``rebound`` (livegraph): tile *contents* were patched after codegen,
     so nnz operands in the binary are checked against slice capacity
-    (n1 x width) instead of exact equality."""
+    (n1 x width) instead of exact equality.
+
+    ``remap`` (sparsity-adaptive remapping): the manifest ``remap``
+    record.  When present, an AGGREGATE tile the record marks ``gemm``
+    may be encoded as a dense-aggregate GEMM — SUM/MEAN reductions
+    only, MAC count n1*n1*n2 (the densified block), distinguishing it
+    from a LINEAR GEMM's n1*n2*n2 — and a tile marked ``skip`` must
+    carry no compute at all and hold zero live edges.  Any encoding
+    that disagrees with the record fails in BOTH directions: a GEMM
+    whose tile the record calls spdmm/skip/absent, and an SPDMM whose
+    tile the record calls gemm in a densifiable layer."""
     report.ran("kernel_legality")
     v = _Budget(report)
+    rec_tiles = (remap or {}).get("tiles", {})
     n1, n2, nb = model.n1, model.n2, model.nb
     for lp in model.plan.layers:
         lt = lp.layer_type
@@ -277,6 +289,37 @@ def check_kernel_legality(model: DefUseModel, report: VerifyReport,
                 bad(f"destination row block {tp.out_j} outside the "
                     f"{nb}-block grid")
             for ins in tp.compute:
+                if lt == LayerType.AGGREGATE and ins.op == Opcode.GEMM:
+                    j, k, i, _packed = ins.args
+                    entry = rec_tiles.get(f"{j}:{k}")
+                    mode = entry.get("mode") if entry else None
+                    if remap is None:
+                        bad("GEMM inside an AGGREGATE layer with no "
+                            "remap record (expects SPDMM)")
+                    elif mode != "gemm":
+                        bad(f"GEMM encodes aggregate tile ({j}, {k}) "
+                            "but the remap record marks it "
+                            f"{mode or 'unmapped'}")
+                    if lp.mode in (int(AggOp.SUM), int(AggOp.MEAN)):
+                        if ins.arg4 != n1 * n1 * n2:
+                            bad("dense-aggregate GEMM announces "
+                                f"{ins.arg4} MACs, the densified tile "
+                                f"implies {n1 * n1 * n2}")
+                    else:
+                        bad("dense-aggregate GEMM under a non-linear "
+                            f"reduction (AggOp {lp.mode}); only "
+                            "SUM/MEAN may densify")
+                    if (j, i) != (tp.out_j, tp.out_i):
+                        bad(f"GEMM targets (j={j}, i={i}) but the "
+                            f"tiling block writes (j={tp.out_j}, "
+                            f"i={tp.out_i})")
+                    if k >= nb:
+                        bad(f"GEMM source block {k} outside the "
+                            f"{nb}-block grid")
+                    if i >= fi:
+                        bad(f"GEMM input fiber {i} outside the "
+                            f"{fi}-fiber grid")
+                    continue
                 if ins.op not in allowed:
                     bad(f"{ins.op.name} inside a {lt.name} layer "
                         "(expects "
@@ -310,6 +353,16 @@ def check_kernel_legality(model: DefUseModel, report: VerifyReport,
                     if i >= fi:
                         bad(f"SPDMM input fiber {i} outside the "
                             f"{fi}-fiber grid")
+                    entry = rec_tiles.get(f"{j}:{k}")
+                    emode = entry.get("mode") if entry else None
+                    if emode == "gemm" and lp.mode in (
+                            int(AggOp.SUM), int(AggOp.MEAN)):
+                        bad(f"SPDMM encodes aggregate tile ({j}, {k}) "
+                            "but the remap record marks it gemm")
+                    elif emode == "skip":
+                        bad(f"tile ({j}, {k}) still carries compute "
+                            "but the remap record elides it as "
+                            "skip-empty")
                     _check_nnz(ins, j, k, s, pgraph, rebound, n1, bad)
                 elif ins.op == Opcode.SDDMM:
                     j, k, i, s = ins.args
@@ -335,6 +388,19 @@ def check_kernel_legality(model: DefUseModel, report: VerifyReport,
                             and ins.act not in tuple(Activation):
                         bad(f"ACT selects activation {ins.act}, "
                             "outside the Activation range")
+    # Skip-elided tiles must actually be empty — a record that elides
+    # a tile with live edges would silently drop messages.
+    if rec_tiles and pgraph is not None:
+        for jk, entry in sorted(rec_tiles.items()):
+            if entry.get("mode") != "skip":
+                continue
+            j, k = (int(x) for x in jk.split(":"))
+            nnz = sum(int(t.nnz) for t in pgraph.tiles.get((j, k), []))
+            if nnz:
+                v.add("kernel_legality",
+                      f"remap record elides tile ({j}, {k}) as "
+                      f"skip-empty but its ELL slices hold {nnz} "
+                      "live edges")
 
 
 def _check_nnz(ins, j: int, k: int, s: int, pgraph, rebound: bool,
@@ -348,6 +414,11 @@ def _check_nnz(ins, j: int, k: int, s: int, pgraph, rebound: bool,
         return
     tile = slices[s]
     if rebound:
+        if ins.arg4 == 0 or tile.nnz == 0:
+            # A rebind can empty a slice (live tile drained by a
+            # delta) without re-encoding arg4; staging reads the ELL
+            # planes by shape, so the operand is advisory here.
+            return
         cap = n1 * tile.width
         if ins.arg4 > cap:
             bad(f"{ins.op.name} announces {ins.arg4} nnz for tile "
@@ -384,7 +455,14 @@ def derive_residency_tables(model: DefUseModel) -> dict:
 
 
 def check_liveness_schedule(model: DefUseModel, residency: dict,
-                            report: VerifyReport) -> None:
+                            report: VerifyReport,
+                            remapped: bool = False) -> None:
+    """``remapped``: skip-elided tiles removed reads *after* the
+    residency schedule was built, so the binary's tables may be a
+    conservative SUBSET of the manifest's (earlier last_use, fewer
+    gather sources) — the manifest then over-retains, which is safe.
+    The reverse direction (binary reads more than the manifest
+    schedules) still fails."""
     report.ran("liveness_schedule")
     v = _Budget(report)
     derived = derive_residency_tables(model)
@@ -393,10 +471,13 @@ def check_liveness_schedule(model: DefUseModel, residency: dict,
     der_last = {int(k): int(t) for k, t in derived["last_use"].items()}
     for lid in sorted(set(man_last) | set(der_last)):
         a, b = man_last.get(lid), der_last.get(lid)
-        if a != b:
-            v.add("liveness_schedule",
-                  f"last_use[{lid}]: manifest says step {a}, binary "
-                  f"implies step {b}", layer_id=lid)
+        if a == b:
+            continue
+        if remapped and a is not None and (b is None or b <= a):
+            continue
+        v.add("liveness_schedule",
+              f"last_use[{lid}]: manifest says step {a}, binary "
+              f"implies step {b}", layer_id=lid)
     man_layers = residency.get("layers", {})
     for lp in model.plan.layers:
         key = str(lp.layer_id)
@@ -408,11 +489,16 @@ def check_liveness_schedule(model: DefUseModel, residency: dict,
                   layer_id=lp.layer_id, instr_lo=lp.instr_lo,
                   instr_hi=lp.instr_hi)
             continue
-        if theirs.get("sources") != mine["sources"]:
-            v.add("liveness_schedule",
-                  "manifest per-shard source lists disagree with the "
-                  "binary's gather set", layer_id=lp.layer_id,
-                  instr_lo=lp.instr_lo, instr_hi=lp.instr_hi)
+        theirs_src = theirs.get("sources") or {}
+        if theirs_src != mine["sources"]:
+            subset = remapped and all(
+                set(ks) <= {int(x) for x in theirs_src.get(jstr, [])}
+                for jstr, ks in mine["sources"].items())
+            if not subset:
+                v.add("liveness_schedule",
+                      "manifest per-shard source lists disagree with "
+                      "the binary's gather set", layer_id=lp.layer_id,
+                      instr_lo=lp.instr_lo, instr_hi=lp.instr_hi)
         if sorted(theirs.get("shard_order", [])) != \
                 sorted(mine["shard_order"]):
             v.add("liveness_schedule",
@@ -422,9 +508,13 @@ def check_liveness_schedule(model: DefUseModel, residency: dict,
 
 
 def check_halo_completeness(model: DefUseModel, placement: dict,
-                            report: VerifyReport) -> None:
+                            report: VerifyReport,
+                            remapped: bool = False) -> None:
     """Every remote source block a device's shards gather from must be
-    in that device's manifest halo set (and nothing else)."""
+    in that device's manifest halo set (and nothing else).  When
+    ``remapped``, skip elision may have removed gathers after the
+    placement was scheduled, so an over-full halo set (extra blocks)
+    is tolerated; a missing block still fails."""
     report.ran("halo_completeness")
     v = _Budget(report)
     assignment = [int(a) for a in placement.get("assignment", [])]
@@ -462,7 +552,7 @@ def check_halo_completeness(model: DefUseModel, placement: dict,
                       f"{sorted(missing)} absent from its halo set",
                       layer_id=lp.layer_id, instr_lo=lp.instr_lo,
                       instr_hi=lp.instr_hi)
-            if extra:
+            if extra and not remapped:
                 v.add("halo_completeness",
                       f"device {d}'s halo set lists blocks "
                       f"{sorted(extra)} no shard of it reads",
@@ -537,7 +627,8 @@ def verify_plan(plan: ExecutionPlan, instrs: List[Instr],
                 residency: Optional[dict] = None,
                 placement: Optional[dict] = None,
                 n_pes: Optional[int] = None, rebound: bool = False,
-                tile_slices=None, label: str = "") -> VerifyReport:
+                tile_slices=None, remap: Optional[dict] = None,
+                label: str = "") -> VerifyReport:
     """Run every check the supplied inputs support."""
     report = VerifyReport(program=label)
     report.stats.update(n_instrs=len(instrs), n_layers=plan.n_layers,
@@ -561,16 +652,18 @@ def verify_plan(plan: ExecutionPlan, instrs: List[Instr],
     check_def_before_use(model, report)
     check_partition_coverage(model, report)
     check_kernel_legality(model, report, n_pes=n_pes, pgraph=pgraph,
-                          rebound=rebound)
+                          rebound=rebound, remap=remap)
     if residency is not None:
         check_use_after_free(model, residency, report)
-        check_liveness_schedule(model, residency, report)
+        check_liveness_schedule(model, residency, report,
+                                remapped=remap is not None)
     else:
         reason = "no residency schedule supplied"
         report.skip("use_after_free", reason)
         report.skip("liveness_schedule", reason)
     if placement is not None:
-        check_halo_completeness(model, placement, report)
+        check_halo_completeness(model, placement, report,
+                                remapped=remap is not None)
     else:
         report.skip("halo_completeness",
                     "program carries no placement schedule")
@@ -611,7 +704,9 @@ def verify_binary(binary: bytes, manifest: Optional[dict] = None,
         n_pes=(int(geometry.get("n_pes", 0)) or None)
         if geometry else None,
         rebound=bool(manifest and "graph_version" in manifest),
-        tile_slices=tile_slices, label=report.program)
+        tile_slices=tile_slices,
+        remap=manifest.get("remap") if manifest else None,
+        label=report.program)
 
 
 def verify_program(prog, label: str = "") -> VerifyReport:
@@ -639,7 +734,8 @@ def verify_program(prog, label: str = "") -> VerifyReport:
         placement=man.get("placement"),
         n_pes=(int(geometry.get("n_pes", 0)) or None)
         if geometry else None,
-        rebound="graph_version" in man, label=name)
+        rebound="graph_version" in man, remap=man.get("remap"),
+        label=name)
 
 
 def verify_gagi(path: str) -> VerifyReport:

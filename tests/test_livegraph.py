@@ -209,19 +209,36 @@ def test_content_delta_keeps_cache_key_structural_delta_misses():
         graph_signature(v0.as_graph())
     assert not v1.stats.structural_change
 
-    # emptying out a whole (j, k) tile drops it from the grid: a
-    # structural change — the instruction binary enumerates tiles
+    # emptying out a whole (j, k) tile is CONTENT-only: the tile keeps
+    # its slice count as zero-nnz slices, so the binary's tile
+    # enumeration (and the program-cache key) survives — the bind-time
+    # remapper elides the dead slices as skip-empty instead.
     jk, te = min(v1.store.edges.items(), key=lambda kv: kv[1].n)
     d2 = GraphDelta(v1.n_vertices)
     for u, w_ in zip(te.src.tolist(), te.dst.tolist()):
         d2.remove_edge(u, w_)
     v2 = store.apply(d2)
-    assert jk not in v2.store.tiles
-    assert v2.stats.tiles_dropped == 1
-    assert v2.stats.structural_change
-    assert v2.structural_signature != sig0
-    assert graph_signature(v2.as_graph()) != \
+    assert jk in v2.store.tiles
+    assert len(v2.store.tiles[jk]) == len(v1.store.tiles[jk])
+    assert all(t.nnz == 0 for t in v2.store.tiles[jk])
+    assert f"{jk[0]}:{jk[1]}" in v2.stats.patched
+    assert not v2.stats.structural_change
+    assert v2.structural_signature == sig0
+    assert graph_signature(v2.as_graph()) == \
         graph_signature(v1.as_graph())
+
+    # a brand-new tile (vertex growth past the padded grid) IS
+    # structural — the instruction binary enumerates tiles
+    d3 = GraphDelta(v2.n_vertices)
+    for _ in range(7):
+        w = d3.add_vertex()
+    d3.add_edge(0, w)
+    v3 = store.apply(d3)
+    assert v3.stats.tiles_created >= 1
+    assert v3.stats.structural_change
+    assert v3.structural_signature != sig0
+    assert graph_signature(v3.as_graph()) != \
+        graph_signature(v2.as_graph())
 
 
 # --------------------------------------------------------------------------- #

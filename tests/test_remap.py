@@ -1,0 +1,309 @@
+"""Bind-time sparsity-adaptive kernel remapping (Dynasparse-style).
+
+Covers the tentpole acceptance criteria:
+  * forced-SpDMM remap restores the canonical binary BYTE for byte
+    (the self-describing NOP/flags encoding round-trips), on b1-b8;
+  * forced-GEMM remap executes bit-identically across the
+    device-resident, host-streaming, and mesh paths, and matches the
+    unremapped program within float-reassociation tolerance;
+  * skip-empty elision (a live delta draining a tile) is BIT-identical
+    to a cold compile of the mutated graph, while the program-cache
+    key survives and ``ExecStats.tiles_skipped`` counts the elisions;
+  * the livegraph rebind re-remaps ONLY delta-patched tiles — every
+    other tile's words and record entries are preserved verbatim, and
+    untouched tile objects stay COW-shared with the parent version;
+  * ``repro.verify`` passes on remapped programs/bundles and fails on
+    a tampered record (both directions: binary GEMM with a record
+    claiming spdmm, and a smuggled GEMM with no record at all).
+"""
+import copy
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core.isa import HEADER_BYTES, Instr, Opcode, disassemble
+from repro.core.passes.partition import PartitionConfig
+from repro.core.passes.remap import (_scan_groups, remap_program,
+                                     resolve_density)
+from repro.engine import Engine
+from repro.livegraph.delta import GraphDelta
+from repro.livegraph.versioning import GraphVersionStore
+from repro.verify.checks import verify_program
+
+GEOM = PartitionConfig(n1=32, n2=8)
+N_DEV = min(4, jax.local_device_count())
+
+
+def _g(nv=90, ne=400, f=12, c=4, seed=0):
+    g = G.random_graph(nv, ne, seed=seed).gcn_normalized()
+    g.feat_dim, g.n_classes = f, c
+    return g
+
+
+def _engine(**kw) -> Engine:
+    return Engine(geometry=GEOM, n_pes=4, **kw)
+
+
+def _words(binary: bytes) -> np.ndarray:
+    return np.frombuffer(binary, dtype="<u4",
+                         offset=HEADER_BYTES).reshape(-1, 4)
+
+
+# --------------------------------------------------------------------------- #
+# Restore round-trip: the remapped encoding is self-describing.
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", ["b1", "b2", "b3", "b4", "b6", "b7"])
+def test_forced_spdmm_restores_canonical(name):
+    eng = _engine()
+    prog = eng.compile(name, _g(seed=3))
+    rp = eng.remap(prog, force="spdmm")
+    assert rp.binary == prog.binary
+    assert rp.manifest["remap"]["counts"]["gemm"] == 0
+    assert rp.manifest["remap"]["counts"]["skip"] == 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["b5", "b8"])
+def test_forced_spdmm_restores_canonical_deep(name):
+    eng = _engine()
+    prog = eng.compile(name, _g(seed=3))
+    assert eng.remap(prog, force="spdmm").binary == prog.binary
+
+
+@pytest.mark.parametrize("name", ["b1", "b3", "b6"])
+def test_forced_gemm_roundtrips_through_restore(name):
+    """remap(gemm) then remap(spdmm) on the REMAPPED program recovers
+    the canonical bytes — restore works on non-canonical input, which
+    is what makes incremental re-remapping a pure word edit."""
+    eng = _engine()
+    prog = eng.compile(name, _g(seed=3))
+    rp = eng.remap(prog, force="gemm")
+    assert rp.binary != prog.binary
+    assert rp.manifest["remap"]["counts"]["gemm"] > 0
+    back = remap_program(rp, force="spdmm")
+    assert back.binary == prog.binary
+
+
+# --------------------------------------------------------------------------- #
+# Execution: forced-GEMM across all three residency paths.
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", ["b1", "b3", "b6"])
+def test_forced_gemm_bit_identical_across_paths(name):
+    g = _g(seed=21)
+    x = jnp.asarray(G.random_features(g, seed=2))
+    eng = _engine()
+    prog = eng.compile(name, g, mesh=N_DEV)
+    y0 = np.asarray(eng.run(prog, x))
+
+    rp = eng.remap(prog, force="gemm")
+    y_dev = np.asarray(eng.run(rp, x))
+    assert eng.exec_stats.tiles_remapped > 0
+    assert eng.exec_stats.tile_ops_by_mode.get("gemm", 0) > 0
+    y_host = np.asarray(eng.run(rp, x, residency="host"))
+    y_mesh = np.asarray(eng.run(rp, x, mesh=N_DEV))
+    # dense-aggregate GEMM reassociates the per-edge sums: allclose vs
+    # the sparse reference, but bit-exact across residency paths.
+    assert np.allclose(y_dev, y0, rtol=1e-4, atol=1e-4)
+    assert np.array_equal(y_dev, y_host)
+    assert np.array_equal(y_dev, y_mesh)
+
+
+def test_auto_remap_spdmm_skip_is_bit_identical():
+    """Restricting modes to spdmm/skip makes auto remap a bit-exact
+    transformation (skip only fires on truly empty tiles)."""
+    g = _g(seed=7)
+    x = jnp.asarray(G.random_features(g, seed=4))
+    eng = _engine()
+    prog = eng.compile("b1", g)
+    y0 = np.asarray(eng.run(prog, x))
+    rp = eng.remap(prog, modes=("spdmm", "skip"))
+    assert rp.manifest["remap"]["counts"]["gemm"] == 0
+    assert np.array_equal(np.asarray(eng.run(rp, x)), y0)
+
+
+def test_forced_gemm_honors_nonlinear_aggops():
+    """A globally-gemm'd program keeps SPDMM encodings inside MAX/MIN
+    aggregate layers — b3 (SAGE) carries a max-aggregate."""
+    eng = _engine()
+    prog = eng.compile("b3", _g(seed=3))
+    rp = eng.remap(prog, force="gemm")
+    instrs = disassemble(rp.binary)
+    by_agg = {}
+    for grp in _scan_groups(instrs):
+        op = instrs[grp.compute].op
+        by_agg.setdefault(int(grp.agg), set()).add(op)
+    for agg, ops in by_agg.items():
+        from repro.core.ir import AggOp
+        if agg in (int(AggOp.SUM), int(AggOp.MEAN)):
+            assert ops == {Opcode.GEMM}
+        else:
+            assert ops == {Opcode.SPDMM}
+
+
+# --------------------------------------------------------------------------- #
+# Skip-empty on a live graph; incremental rebind remap.
+# --------------------------------------------------------------------------- #
+def _drain_smallest_tile(store):
+    jk = min(store.edges, key=lambda k: store.edges[k].n)
+    te = store.edges[jk]
+    d = GraphDelta(base_vertices=store.n_vertices)
+    for u, w in zip(te.src.tolist(), te.dst.tolist()):
+        d.remove_edge(u, w)
+    return jk, d
+
+
+def test_skip_empty_elision_bit_identical_to_cold():
+    g = _g(seed=7)
+    x = jnp.asarray(G.random_features(g, seed=4))
+    live = GraphVersionStore(g, GEOM, name="lv")
+    eng = _engine()
+    prog = eng.compile("b1", live.head.as_graph())
+    eng.remap(prog, modes=("spdmm", "skip"))   # re-caches remapped copy
+
+    jk, d = _drain_smallest_tile(live.head.store)
+    v1 = live.apply(d)
+    assert not v1.stats.structural_change
+    compiles = eng.stats.compiles
+    p1 = eng.compile("b1", v1.as_graph())
+    assert eng.stats.compiles == compiles       # content-only: cache hit
+    rec = p1.manifest["remap"]
+    assert rec["tiles"][f"{jk[0]}:{jk[1]}"]["mode"] == "skip"
+    assert rec["counts"]["skip"] >= 1
+    assert rec["skipped_tile_ops"] > 0
+
+    y = np.asarray(eng.run(p1, x))
+    assert eng.exec_stats.tiles_skipped == rec["skipped_tile_ops"]
+    y_host = np.asarray(eng.run(p1, x, residency="host"))
+    assert np.array_equal(y, y_host)
+
+    g1 = d.apply_to(g)
+    cold = _engine()
+    y_cold = np.asarray(cold.run(cold.compile("b1", g1), x))
+    assert np.array_equal(y, y_cold)
+
+
+def test_rebind_remaps_only_patched_tiles():
+    g = _g(seed=7)
+    live = GraphVersionStore(g, GEOM, name="lv")
+    eng = _engine()
+    prog = eng.compile("b1", live.head.as_graph())
+    rp0 = eng.remap(prog, force="gemm")
+
+    jk_empty, d = _drain_smallest_tile(live.head.store)
+    jk_other = max(live.head.store.edges,
+                   key=lambda k: live.head.store.edges[k].n)
+    o = live.head.store.edges[jk_other]
+    d.add_edge(int(o.src[0]), int(o.dst[0]), 0.5)
+    v1 = live.apply(d)
+    patched = set(v1.stats.patched)
+    assert patched == {f"{jk_empty[0]}:{jk_empty[1]}",
+                       f"{jk_other[0]}:{jk_other[1]}"}
+
+    p1 = eng.compile("b1", v1.as_graph())
+    rec = p1.manifest["remap"]
+    assert rec["tiles"][f"{jk_empty[0]}:{jk_empty[1]}"]["mode"] == "skip"
+    # untouched tiles keep their forced-gemm record entries verbatim
+    for jk, entry in rec["tiles"].items():
+        if jk not in patched:
+            assert entry == rp0.manifest["remap"]["tiles"][jk]
+
+    # word-level: every differing instruction belongs to a patched tile
+    w0, w1 = _words(rp0.binary), _words(p1.binary)
+    assert w0.shape == w1.shape
+    diff_rows = set(np.nonzero((w0 != w1).any(axis=1))[0].tolist())
+    instrs = [Instr.decode(w) for w in w0]
+    owner = {}
+    for grp in _scan_groups(instrs):
+        for idx in (grp.compute, *grp.mem):
+            owner[idx] = f"{grp.j}:{grp.k}"
+    for row in diff_rows:
+        assert owner.get(row) in patched, \
+            f"instr {row} changed outside the patched tiles"
+
+    # COW: untouched tile objects are THE SAME as the parent's
+    for jk in v1.store.tiles:
+        if f"{jk[0]}:{jk[1]}" not in patched:
+            assert v1.store.tiles[jk] is live.get(0).store.tiles[jk]
+
+    # rebinding the same program again reuses the cached bound copy
+    again = v1.bind(eng.cache.get(prog.cache_key))
+    assert again is v1.bind(eng.cache.get(prog.cache_key))
+
+
+# --------------------------------------------------------------------------- #
+# Density sources.
+# --------------------------------------------------------------------------- #
+def test_exec_profile_density_source():
+    g = _g(seed=7)
+    x = jnp.asarray(G.random_features(g, seed=4))
+    eng = _engine()
+    prog = eng.compile("b1", g)
+    with pytest.raises(ValueError):
+        resolve_density(prog, "exec_profile")
+    eng._executor.profile_tiles = True
+    eng.run(prog, x)
+    stats, src = resolve_density(prog, "exec_profile")
+    assert src == "exec_profile"
+    pg_nnz = {f"{j}:{k}": sum(t.nnz for t in ts)
+              for (j, k), ts in prog.pgraph.tiles.items()}
+    assert {jk: s["nnz"] for jk, s in stats.items()} == pg_nnz
+    rp = eng.remap(prog, source="exec_profile")
+    assert rp.manifest["remap"]["source"] == "exec_profile"
+
+
+def test_calibrated_constants_change_signature():
+    eng = _engine()
+    prog = eng.compile("b1", _g(seed=3))
+    r_default = eng.remap(prog)
+    r_cal = eng.remap(prog, report={"peak_flops": 1e12, "vpu_flops": 1e9,
+                                    "hbm_bw": 1e10})
+    assert not r_default.manifest["remap"]["calibrated"]
+    assert r_cal.manifest["remap"]["calibrated"]
+    assert r_default.manifest["remap"]["signature"] != \
+        r_cal.manifest["remap"]["signature"]
+
+
+# --------------------------------------------------------------------------- #
+# Verification: remapped programs pass; tampering fails.
+# --------------------------------------------------------------------------- #
+def test_verify_passes_on_remapped_gagi(tmp_path):
+    g = _g(seed=3)
+    eng = _engine()
+    prog = eng.compile("b1", g, mesh=N_DEV)
+    rp = eng.remap(prog, force="gemm")     # Engine.remap verifies too
+    assert verify_program(rp).ok
+    path = str(tmp_path / "remapped.gagi")
+    rp.save(path)
+    from repro.verify.checks import verify_gagi
+    assert verify_gagi(path).ok
+
+
+def test_verify_catches_tampered_record():
+    eng = _engine()
+    rp = eng.remap(eng.compile("b1", _g(seed=3)), force="gemm")
+    bad = dataclasses.replace(rp, manifest=copy.deepcopy(rp.manifest))
+    jk = next(k for k, e in bad.manifest["remap"]["tiles"].items()
+              if e["mode"] == "gemm")
+    bad.manifest["remap"]["tiles"][jk]["mode"] = "spdmm"
+    rep = verify_program(bad)
+    assert not rep.ok
+    assert any("remap record marks it spdmm" in v.message
+               for v in rep.violations)
+
+
+def test_verify_catches_unrecorded_gemm():
+    """A GEMM smuggled into an AGGREGATE layer with NO remap record
+    still fails — the legality gate did not simply get wider."""
+    eng = _engine()
+    prog = eng.compile("b1", _g(seed=3))
+    rp = remap_program(prog, force="gemm")
+    stripped = dict(rp.manifest)
+    del stripped["remap"]
+    bad = dataclasses.replace(rp, manifest=stripped, _plan=None)
+    rep = verify_program(bad)
+    assert not rep.ok
+    assert any("no remap record" in v.message for v in rep.violations)
